@@ -1,0 +1,56 @@
+"""Ingest-path benchmarks (paper Section 3.2 constraints): µs/edge for the
+paper-faithful scalar path, the vectorized scatter, the one-hot MXU
+formulation, and the Pallas kernel (interpret mode on this host — the Pallas
+number is a CORRECTNESS artifact here; its perf claim is the roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import GLavaSketch, SketchConfig
+
+
+def run():
+    cfg = SketchConfig(depth=4, width_rows=1024, width_cols=1024)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    b = 32768
+    src = jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32)
+    w = jnp.asarray(rng.integers(1, 5, b), jnp.float32)
+
+    seq = jax.jit(lambda s, a, d_, w_: s.update_sequential(a[:256], d_[:256], w_[:256]))
+    us = time_fn(seq, sk, src, dst, w, iters=3)
+    record("ingest_sequential_paper_literal", us / 256, batch=256)
+
+    scat = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="scatter"))
+    us = time_fn(scat, sk, src, dst, w)
+    record("ingest_scatter_vectorized", us / b, batch=b)
+
+    oneh = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="onehot"))
+    us = time_fn(oneh, sk, src, dst, w, iters=3)
+    record("ingest_onehot_mxu_formulation", us / b, batch=b)
+
+    pal = jax.jit(lambda s, a, d_, w_: s.update(a[:4096], d_[:4096], w_[:4096], backend="pallas"))
+    us = time_fn(pal, sk, src, dst, w, iters=2)
+    record("ingest_pallas_interpret", us / 4096, batch=4096,
+           note="interpret-mode correctness path on CPU host")
+
+    # O(1)-per-edge invariant: per-edge cost must not grow with sketch fill
+    filled = sk.update(src, dst, w)
+    us_empty = time_fn(scat, sk, src, dst, w)
+    us_full = time_fn(scat, filled, src, dst, w)
+    record("ingest_O1_invariance", us_full / b,
+           empty_us_per_edge=round(us_empty / b, 3),
+           ratio=round(us_full / max(us_empty, 1e-9), 2))
+
+    # linear-time construction: total time ~ linear in stream length
+    t1 = time_fn(scat, sk, src[: b // 2], dst[: b // 2], w[: b // 2])
+    t2 = time_fn(scat, sk, src, dst, w)
+    record("construction_linearity", t2 / b, half_over_full=round(t1 / t2, 2))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference per kernel.
+Interpret-mode timings are NOT TPU performance — they prove the call path;
+TPU performance lives in the roofline (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.kernels.closure.ops import transitive_closure as closure_k
+from repro.kernels.flow.ops import flows
+from repro.kernels.flow.ref import flows_ref
+from repro.kernels.ingest.ops import sketch_ingest
+from repro.kernels.ingest.ref import sketch_ingest_ref
+from repro.kernels.query.ops import edge_query_cells
+from repro.kernels.query.ref import edge_query_ref
+from repro.core import reach
+
+
+def run():
+    rng = np.random.default_rng(0)
+    d, w, b = 4, 512, 4096
+    counters = jnp.asarray(rng.integers(0, 50, (d, w, w)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, w, (d, b)), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, w, (d, b)), jnp.int32)
+    wts = jnp.ones(b, jnp.float32)
+
+    record("kernel_ingest_pallas", time_fn(jax.jit(sketch_ingest), counters, rows, cols, wts, iters=2))
+    record("kernel_ingest_ref", time_fn(jax.jit(sketch_ingest_ref), counters, rows, cols, wts))
+    record("kernel_query_pallas", time_fn(jax.jit(edge_query_cells), counters, rows, cols, iters=2))
+    record("kernel_query_ref", time_fn(jax.jit(edge_query_ref), counters, rows, cols))
+    record("kernel_flow_pallas", time_fn(jax.jit(flows), counters, iters=2))
+    record("kernel_flow_ref", time_fn(jax.jit(flows_ref), counters))
+    small = counters[:1, :256, :256]
+    record("kernel_closure_pallas", time_fn(jax.jit(lambda a: closure_k(a[0])), small, iters=2))
+    record("kernel_closure_ref", time_fn(jax.jit(lambda a: reach.transitive_closure(a[0])), small))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,92 @@
+"""Query-capability benchmarks: reachability precision (Section 4.3),
+subgraph semantics (Section 4.4), throughput per query family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import GLavaSketch, SketchConfig, queries, reach
+
+
+def bench_reachability_precision():
+    """False-positive rate vs sketch width on a layered DAG (no back-paths:
+    every reverse query is a true negative).  Recall is ALWAYS 1 (one-sided
+    error, tested separately)."""
+    rng = np.random.default_rng(0)
+    layers = 4
+    per = 100
+    src_l, dst_l = [], []
+    for l in range(layers - 1):
+        s = rng.integers(l * per, (l + 1) * per, 300)
+        d = rng.integers((l + 1) * per, (l + 2) * per, 300)
+        src_l.append(s)
+        dst_l.append(d)
+    src = jnp.asarray(np.concatenate(src_l), jnp.uint32)
+    dst = jnp.asarray(np.concatenate(dst_l), jnp.uint32)
+    q_from = jnp.asarray(rng.integers((layers - 1) * per, layers * per, 400), jnp.uint32)
+    q_to = jnp.asarray(rng.integers(0, per, 400), jnp.uint32)
+    for w in (64, 128, 256, 512):
+        cfg = SketchConfig(depth=4, width_rows=w, width_cols=w)
+        fps = []
+        for t in range(3):
+            sk = GLavaSketch.empty(cfg, jax.random.key(t)).update(src, dst)
+            r = np.asarray(queries.reach_query(sk, q_from, q_to))
+            fps.append(r.mean())  # all are true negatives
+        record(f"reach_fp_rate_w{w}", 0.0, fp_rate=round(float(np.mean(fps)), 4))
+    # recall: forward pairs known reachable
+    sk = GLavaSketch.empty(SketchConfig(4, 64, 64), jax.random.key(9)).update(src, dst)
+    r = np.asarray(queries.reach_query(sk, src[:200], dst[:200]))
+    record("reach_recall_direct_edges", 0.0, recall=float(r.mean()))
+
+
+def bench_subgraph_semantics():
+    rng = np.random.default_rng(1)
+    src = jnp.asarray(rng.integers(0, 400, 3000), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 400, 3000), jnp.uint32)
+    sk = GLavaSketch.empty(SketchConfig(4, 256, 256), jax.random.key(2)).update(src, dst)
+    viol = 0
+    zero_sem_ok = True
+    for t in range(200):
+        k = rng.integers(2, 5)
+        idx = rng.integers(0, 3000, k)
+        qs, qd = src[idx], dst[idx]
+        f = float(queries.subgraph_query(sk, qs, qd))
+        fo = float(queries.subgraph_query_opt(sk, qs, qd))
+        if fo > f + 1e-5:
+            viol += 1
+        # insert one absent edge -> revised semantics must yield 0
+        qs0 = jnp.concatenate([qs, jnp.asarray([999999], jnp.uint32)])
+        qd0 = jnp.concatenate([qd, jnp.asarray([999998], jnp.uint32)])
+        if float(queries.subgraph_query(sk, qs0, qd0)) != 0.0:
+            zero_sem_ok = False
+    record("subgraph_fopt_leq_f", 0.0, violations=viol, trials=200)
+    record("subgraph_zero_propagation", 0.0, holds=zero_sem_ok)
+
+
+def bench_query_throughput():
+    cfg = SketchConfig(4, 1024, 1024)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, 100000, 100000), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 100000, 100000), jnp.uint32)
+    sk = sk.update(src, dst)
+    q = 4096
+    qs, qd = src[:q], dst[:q]
+    f_edge = jax.jit(queries.edge_query)
+    us = time_fn(f_edge, sk, qs, qd)
+    record("throughput_edge_query", us / q, batch=q, total_us=round(us, 1))
+    f_in = jax.jit(queries.node_in_flow)
+    us = time_fn(f_in, sk, qs)
+    record("throughput_point_query", us / q, batch=q, total_us=round(us, 1))
+    f_cl = jax.jit(reach.transitive_closure)
+    us = time_fn(f_cl, sk.counters, iters=2)
+    record("throughput_closure_refresh", us, w=1024, d=4,
+           note="amortized over all reach queries between refreshes")
+
+
+def run():
+    bench_reachability_precision()
+    bench_subgraph_semantics()
+    bench_query_throughput()

@@ -1,0 +1,45 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+ROWS: List[Dict] = []
+
+
+def record(name: str, us_per_call: float, **derived):
+    row = {"name": name, "us_per_call": us_per_call, **derived}
+    ROWS.append(row)
+    dstr = " ".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.2f},{dstr}")
+    return row
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in µs (block_until_ready on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def zipf_stream(n_nodes: int, n_edges: int, seed: int = 0, a: float = 1.2):
+    from repro.data.graphs import edge_stream
+
+    return edge_stream(n_nodes, n_edges, np.random.default_rng(seed), zipf_a=a)
+
+
+def exact_edge_counts(src, dst, w):
+    import collections
+
+    c = collections.Counter()
+    for s, d, wt in zip(np.asarray(src), np.asarray(dst), np.asarray(w)):
+        c[(int(s), int(d))] += float(wt)
+    return c

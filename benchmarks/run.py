@@ -1,0 +1,43 @@
+"""Benchmark harness — one section per validatable paper claim (the paper
+has no experimental tables; Thm 1, Lemma 5.2, Sections 3.2/4.3/4.4/6.1.2 are
+the claims).  Prints ``name,us_per_call,derived`` CSV rows and writes
+results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (
+        bench_accuracy,
+        bench_compression,
+        bench_ingest,
+        bench_kernels,
+        bench_queries,
+    )
+    from benchmarks.common import ROWS
+
+    print("name,us_per_call,derived")
+    for section in (
+        ("accuracy (Thm1/Lemma5.2/equal-space/nonsquare/CU)", bench_accuracy.run),
+        ("queries (reach/subgraph/throughput)", bench_queries.run),
+        ("ingest (Section 3.2 constraints)", bench_ingest.run),
+        ("compression (sketched all-reduce)", bench_compression.run),
+        ("kernels (pallas vs ref)", bench_kernels.run),
+    ):
+        name, fn = section
+        print(f"# --- {name} ---")
+        fn()
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    (out / "benchmarks.json").write_text(json.dumps(ROWS, indent=1))
+    print(f"# done: {len(ROWS)} rows in {time.time()-t0:.1f}s -> results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""gLava × GraphSAGE: train on a STREAMED graph where exact degrees are
+unavailable — the neighbor sampler's importance weights come from sketch
+point queries (DESIGN.md Section 5, direct-applicability row).
+
+Run: PYTHONPATH=src python examples/gnn_sketch_sampling.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import SketchConfig
+from repro.data.graphs import citation_graph
+from repro.integration.sketch_sampler import StreamingDegreeSketch, sketch_weighted_seeds
+from repro.models.gnn import graphsage
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn.sampler import CSRGraph, sample_subgraph
+from repro.train import optimizer as opt_mod
+
+N, E, F, C = 2000, 12000, 32, 5
+rng = np.random.default_rng(0)
+g = citation_graph(N, E, F, C, rng)
+csr = CSRGraph.from_edges(g["edge_src"], g["edge_dst"], N)
+
+# --- stream the edges through a gLava sketch (one pass) ---------------------
+deg_sketch = StreamingDegreeSketch(SketchConfig(depth=4, width_rows=512, width_cols=512))
+for lo in range(0, E, 4096):
+    deg_sketch.observe(g["edge_src"][lo : lo + 4096], g["edge_dst"][lo : lo + 4096])
+
+est = deg_sketch.degree_estimates(np.arange(N, dtype=np.uint32), direction="in")
+exact = np.bincount(g["edge_dst"], minlength=N)
+corr = np.corrcoef(est, exact)[0, 1]
+print(f"[gnn] sketch degree estimates: corr(est, exact) = {corr:.3f} "
+      f"(over-estimates: {np.all(est >= exact - 1e-5)})")
+
+# --- sketch-weighted seeds -> fanout sampling -> SAGE training ---------------
+cfg = graphsage.SAGEConfig(name="sage-stream", n_layers=2, d_in=F, d_hidden=32, out_dim=C)
+params = graphsage.init_params(cfg, jax.random.key(0))
+opt_cfg = opt_mod.AdamWConfig(lr=5e-3, warmup_steps=10, total_steps=120, weight_decay=0.0)
+opt = opt_mod.init_adamw(opt_cfg, params)
+FANOUTS = (5, 5)
+BATCH = 64
+
+
+@jax.jit
+def train_step(params, opt, batch, labels):
+    def lfn(p):
+        gb = GraphBatch(
+            node_feat=batch["node_feat"], edge_src=batch["edge_src"],
+            edge_dst=batch["edge_dst"], node_mask=batch["node_mask"],
+            edge_mask=batch["edge_mask"],
+        )
+        logits = graphsage.forward(cfg, p, gb)[:BATCH].astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+        return jnp.mean(logz - gold), logits
+
+    (loss, logits), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+    params, opt, _ = opt_mod.apply_adamw(opt_cfg, opt, params, grads)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return params, opt, loss, acc
+
+for step in range(120):
+    seeds = sketch_weighted_seeds(deg_sketch, N, BATCH, rng, alpha=0.5)
+    sub = sample_subgraph(csr, seeds, FANOUTS, rng, features=g["node_feat"])
+    labels = jnp.asarray(g["labels"][seeds])
+    batch = {k: jnp.asarray(v) for k, v in sub.items() if k != "seed_slots"}
+    params, opt, loss, acc = train_step(params, opt, batch, labels)
+    if step % 20 == 0:
+        print(f"[gnn] step {step:3d} loss={float(loss):.3f} seed-acc={float(acc):.2f}")
+
+print(f"[gnn] final seed accuracy {float(acc):.2f} (chance {1/C:.2f}) — trained "
+      "entirely with sketch-estimated degrees")

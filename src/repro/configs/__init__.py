@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ArchSpec,
+    ShapeSpec,
+    all_archs,
+    all_cells,
+    get_arch,
+    load_all,
+    triplet_budget,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "ArchSpec",
+    "ShapeSpec",
+    "all_archs",
+    "all_cells",
+    "get_arch",
+    "load_all",
+    "triplet_budget",
+]

@@ -1,0 +1,44 @@
+"""gLava core: the paper's contribution as composable JAX modules."""
+from repro.core.hashing import (
+    HashFamily,
+    MERSENNE_P,
+    affine_hash,
+    affine_hash_np,
+    fnv1a_label,
+    make_hash_family,
+    mix_keys,
+    mulmod31,
+    sign_hash,
+)
+from repro.core.sketch import (
+    CountMin,
+    CountSketch,
+    GLavaSketch,
+    GSketch,
+    NodeCountMin,
+    SketchConfig,
+)
+from repro.core import queries
+from repro.core import reach
+from repro.core.window import SlidingWindowSketch
+
+__all__ = [
+    "HashFamily",
+    "MERSENNE_P",
+    "affine_hash",
+    "affine_hash_np",
+    "fnv1a_label",
+    "make_hash_family",
+    "mix_keys",
+    "mulmod31",
+    "sign_hash",
+    "CountMin",
+    "CountSketch",
+    "GLavaSketch",
+    "GSketch",
+    "NodeCountMin",
+    "SketchConfig",
+    "queries",
+    "reach",
+    "SlidingWindowSketch",
+]

@@ -1,0 +1,181 @@
+"""Distributed gLava: the paper's Section 6.3 as an explicit JAX program.
+
+The sketch is a *linear* projection of the stream, so the distributed recipe
+is exactly the paper's: every worker ingests its local shard of the stream
+into a local copy of the (same-hash-family) sketch, and the global sketch is
+the elementwise SUM of the locals.  Expressed with ``shard_map``:
+
+- the edge batch is sharded over the ``(pod, data)`` mesh axes,
+- the counter tensor's ROW axis is sharded over ``model`` (so a 16-way model
+  axis holds w_r/16 rows per chip — sketches wider than one chip's HBM are
+  supported),
+- each device accumulates only rows it owns (the one-hot formulation masks
+  out-of-shard rows for free), and
+- ``psum`` over (pod, data) merges the partial sketches.
+
+Query-side collectives: point/edge queries gather from the row-owner and
+psum-combine masked partials.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sketch import GLavaSketch
+
+
+def _row_shard_ingest(counters_shard, r, c, weights, *, wr_shard, model_axis):
+    """Per-device body: accumulate the rows this model-shard owns, then merge
+    stream shards.  counters_shard: (d, wr/TP, wc); r/c: (d, B_local)."""
+    my_idx = jax.lax.axis_index(model_axis)
+    row_lo = my_idx * wr_shard
+    local_r = r - row_lo
+    in_shard = (local_r >= 0) & (local_r < wr_shard)
+    # One-hot over the LOCAL row range; out-of-shard rows hit the zero row.
+    oh_r = jax.nn.one_hot(
+        jnp.where(in_shard, local_r, wr_shard), wr_shard + 1, dtype=jnp.float32
+    )[..., :wr_shard]
+    wc = counters_shard.shape[-1]
+    oh_c = jax.nn.one_hot(c, wc, dtype=jnp.float32) * weights[None, :, None]
+    upd = jnp.einsum("dbr,dbc->drc", oh_r, oh_c)
+    return counters_shard + upd
+
+
+def distributed_ingest(
+    mesh: jax.sharding.Mesh,
+    sketch: GLavaSketch,
+    src: jax.Array,
+    dst: jax.Array,
+    weights: Optional[jax.Array] = None,
+    *,
+    stream_axes: Sequence[str] = ("data",),
+    model_axis: str = "model",
+) -> GLavaSketch:
+    """Ingest a GLOBAL edge batch, sharded over `stream_axes`, into a sketch
+    whose rows are sharded over `model_axis`.  Returns the updated sketch
+    with the same shardings."""
+    if weights is None:
+        weights = jnp.ones(src.shape, jnp.float32)
+    weights = weights.astype(jnp.float32)
+    r, c = sketch.hash_edges(src, dst)  # (d, B) — computed under pjit; cheap
+    d, wr, wc = sketch.counters.shape
+    tp = mesh.shape[model_axis]
+    assert wr % tp == 0, f"sketch rows {wr} must divide model axis {tp}"
+    wr_shard = wr // tp
+    stream_spec = P(None, tuple(stream_axes))  # (d, B) sharded on batch
+
+    def body(counters_shard, r, c, w):
+        upd = _row_shard_ingest(
+            counters_shard, r, c, w, wr_shard=wr_shard, model_axis=model_axis
+        )
+        # Merge stream shards: the paper's distributed merge-by-add.
+        delta = upd - counters_shard
+        delta = jax.lax.psum(delta, tuple(stream_axes))
+        return counters_shard + delta
+
+    counters = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, model_axis, None),  # counters: rows sharded
+            stream_spec,                # r
+            stream_spec,                # c
+            P(tuple(stream_axes)),      # weights
+        ),
+        out_specs=P(None, model_axis, None),
+    )(sketch.counters, r, c, weights)
+    return dataclasses.replace(sketch, counters=counters)
+
+
+def distributed_edge_query(
+    mesh: jax.sharding.Mesh,
+    sketch: GLavaSketch,
+    src: jax.Array,
+    dst: jax.Array,
+    *,
+    model_axis: str = "model",
+) -> jax.Array:
+    """Batched f̃_e over a row-sharded sketch: each shard contributes the
+    cells it owns (others contribute +inf), min-reduced over model axis."""
+    r, c = sketch.hash_edges(src, dst)  # (d, Q)
+    d, wr, wc = sketch.counters.shape
+    tp = mesh.shape[model_axis]
+    wr_shard = wr // tp
+
+    def body(counters_shard, r, c):
+        my_idx = jax.lax.axis_index(model_axis)
+        local_r = r - my_idx * wr_shard
+        in_shard = (local_r >= 0) & (local_r < wr_shard)
+        safe_r = jnp.clip(local_r, 0, wr_shard - 1)
+        d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], r.shape)
+        vals = counters_shard[d_idx, safe_r, c]
+        vals = jnp.where(in_shard, vals, jnp.inf)
+        vals = jax.lax.pmin(vals, model_axis)  # (d, Q) now replicated
+        return jnp.min(vals, axis=0)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, model_axis, None), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(sketch.counters, r, c)
+
+
+def distributed_point_query(
+    mesh: jax.sharding.Mesh,
+    sketch: GLavaSketch,
+    keys: jax.Array,
+    direction: str = "in",
+    *,
+    model_axis: str = "model",
+) -> jax.Array:
+    """f̃_v over a row-sharded sketch.  Out-flow needs only the owner shard's
+    row sum; in-flow column sums span shards → psum of partial column sums."""
+    d, wr, wc = sketch.counters.shape
+    tp = mesh.shape[model_axis]
+    wr_shard = wr // tp
+    if direction == "in":
+        h = sketch.col_hash(keys)  # (d, Q) — column index, not sharded
+
+        def body(counters_shard, h):
+            col_sums = jax.lax.psum(
+                jnp.sum(counters_shard, axis=1), model_axis
+            )  # (d, wc)
+            vals = jnp.take_along_axis(col_sums, h, axis=1)
+            return jnp.min(vals, axis=0)
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(None, model_axis, None), P()),
+            out_specs=P(),
+            check_vma=False,
+        )(sketch.counters, h)
+    else:
+        h = sketch.row_hash(keys)
+
+        def body(counters_shard, h):
+            my_idx = jax.lax.axis_index(model_axis)
+            local = h - my_idx * wr_shard
+            in_shard = (local >= 0) & (local < wr_shard)
+            safe = jnp.clip(local, 0, wr_shard - 1)
+            row_sums = jnp.sum(counters_shard, axis=2)  # (d, wr_shard)
+            vals = jnp.take_along_axis(row_sums, safe, axis=1)
+            vals = jnp.where(in_shard, vals, jnp.inf)
+            vals = jax.lax.pmin(vals, model_axis)
+            return jnp.min(vals, axis=0)
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(None, model_axis, None), P()),
+            out_specs=P(),
+            check_vma=False,
+        )(sketch.counters, h)

@@ -1,0 +1,171 @@
+"""Pairwise-independent hashing over the Mersenne prime 2**31 - 1.
+
+The paper (Section 6.2) requires hash functions drawn uniformly from a
+pairwise-independent family ``h(x) = ((a*x + b) mod p) mod w``.  gLava needs
+the hash *inside* jit/Pallas (sketch updates happen on-device), and JAX in
+this container runs without x64, so the 62-bit product ``a*x`` is computed
+with 16-bit limbs in uint32 arithmetic, reduced mod p = 2**31 - 1 using
+``2**31 ≡ 1 (mod p)``.
+
+Everything here is validated against exact big-int arithmetic in
+``tests/test_hashing.py`` (hypothesis property tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MERSENNE_P = (1 << 31) - 1  # 2**31 - 1, prime
+_P31 = np.uint32(MERSENNE_P)
+_MASK16 = np.uint32(0xFFFF)
+_MASK15 = np.uint32(0x7FFF)
+
+
+def _fold31(v: jax.Array) -> jax.Array:
+    """One folding step: v (uint32) -> (v >> 31) + (v & (2**31-1))."""
+    return (v >> np.uint32(31)) + (v & _P31)
+
+
+def _reduce31(v: jax.Array) -> jax.Array:
+    """Full reduction of a uint32 value mod p (two folds + conditional sub)."""
+    v = _fold31(_fold31(v))
+    return jnp.where(v >= _P31, v - _P31, v)
+
+
+def _add_mod31(u: jax.Array, v: jax.Array) -> jax.Array:
+    """(u + v) mod p for u, v < 2**31 (sum fits in uint32)."""
+    s = u + v
+    s = _fold31(s)
+    return jnp.where(s >= _P31, s - _P31, s)
+
+
+def mulmod31(a: jax.Array, x: jax.Array) -> jax.Array:
+    """(a * x) mod (2**31 - 1) for a, x uint32 < 2**31, in uint32 limb math.
+
+    Split a = a1*2**16 + a0, x = x1*2**16 + x0 (a1, x1 < 2**15):
+      a*x = a1*x1*2**32 + (a1*x0 + a0*x1)*2**16 + a0*x0
+    with 2**32 ≡ 2 and 2**31 ≡ 1 (mod p).
+    """
+    a = a.astype(jnp.uint32)
+    x = x.astype(jnp.uint32)
+    a1, a0 = a >> np.uint32(16), a & _MASK16
+    x1, x0 = x >> np.uint32(16), x & _MASK16
+    hi = a1 * x1                      # < 2**30
+    mid = a1 * x0 + a0 * x1           # < 2**32 (fits)
+    lo = a0 * x0                      # < 2**32
+    # hi * 2**32 ≡ hi * 2
+    hi_term = _reduce31(hi << np.uint32(1))
+    # mid * 2**16: reduce mid first, then split mid = mh*2**15 + ml so that
+    # mid*2**16 = mh*2**31 + ml*2**16 ≡ mh + ml*2**16 (ml*2**16 < 2**31).
+    mid = _reduce31(mid)
+    mh = mid >> np.uint32(15)
+    ml = mid & _MASK15
+    mid_term = _add_mod31(mh, ml << np.uint32(16))
+    return _add_mod31(_add_mod31(hi_term, mid_term), _reduce31(lo))
+
+
+def affine_hash(keys: jax.Array, a: jax.Array, b: jax.Array, w: int) -> jax.Array:
+    """h(x) = (((a*x + b) mod p) mod w) as int32 in [0, w).
+
+    ``keys`` may be any uint32 values; they are reduced mod p first.  ``a``
+    and ``b`` broadcast against ``keys`` so a (d, 1) parameter array hashes a
+    (n,) key array to (d, n) bucket indices in one call.
+    """
+    k = _reduce31(keys.astype(jnp.uint32))
+    h = _add_mod31(mulmod31(a, k), b.astype(jnp.uint32))
+    return (h % np.uint32(w)).astype(jnp.int32)
+
+
+def sign_hash(keys: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """CountSketch sign hash: ±1 (int32), from the low bit of the affine hash."""
+    k = _reduce31(keys.astype(jnp.uint32))
+    h = _add_mod31(mulmod31(a, k), b.astype(jnp.uint32))
+    return (1 - 2 * (h & np.uint32(1)).astype(jnp.int32))
+
+
+def mix_keys(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mix two uint32 keys into one (edge key for CountMin baselines).
+
+    Multiplicative mixing (Knuth constant) keeps the composition injective
+    enough for sketching; exactness is not required — only spread.
+    """
+    x = x.astype(jnp.uint32)
+    y = y.astype(jnp.uint32)
+    h = x * np.uint32(0x9E3779B1)
+    h = (h ^ y) * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Hash family (pytree)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HashFamily:
+    """d independent affine hashes onto [0, w).  ``a``/``b`` have shape (d,)."""
+
+    a: jax.Array
+    b: jax.Array
+    w: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return self.a.shape[0]
+
+    def __call__(self, keys: jax.Array) -> jax.Array:
+        """keys (...,) uint32 -> (d, ...) int32 bucket indices."""
+        d = self.a.shape[0]
+        shape = (d,) + (1,) * keys.ndim
+        return affine_hash(keys[None], self.a.reshape(shape), self.b.reshape(shape), self.w)
+
+    def signs(self, keys: jax.Array) -> jax.Array:
+        """keys (...,) -> (d, ...) ±1 signs (uses an independent slice of b)."""
+        d = self.a.shape[0]
+        shape = (d,) + (1,) * keys.ndim
+        # Derive a decorrelated parameter set for the sign bits.
+        a2 = self.b.reshape(shape) | np.uint32(1)
+        b2 = self.a.reshape(shape)
+        return sign_hash(keys[None], a2, b2)
+
+
+def make_hash_family(key: jax.Array, depth: int, width: int) -> HashFamily:
+    """Sample a HashFamily: a ~ U[1, p-1], b ~ U[0, p-1]."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.randint(ka, (depth,), 1, MERSENNE_P, dtype=jnp.uint32)
+    b = jax.random.randint(kb, (depth,), 0, MERSENNE_P, dtype=jnp.uint32)
+    return HashFamily(a=a, b=b, w=int(width))
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy, exact uint64) reference used by the data pipeline
+# ---------------------------------------------------------------------------
+
+
+def affine_hash_np(keys: np.ndarray, a: np.ndarray, b: np.ndarray, w: int) -> np.ndarray:
+    """Exact uint64 reference of affine_hash (host path + test oracle)."""
+    k = keys.astype(np.uint64) % np.uint64(MERSENNE_P)
+    h = (a.astype(np.uint64) * k + b.astype(np.uint64)) % np.uint64(MERSENNE_P)
+    return (h % np.uint64(w)).astype(np.int32)
+
+
+def fnv1a_label(label: Any) -> int:
+    """Stable 32-bit FNV-1a of an arbitrary node label (host side).
+
+    Graph streams carry IPs / user-IDs / strings; this maps them to the
+    uint32 key space the device hashes expect.
+    """
+    if isinstance(label, (int, np.integer)):
+        return int(label) & 0xFFFFFFFF
+    data = str(label).encode("utf-8")
+    h = 0x811C9DC5
+    for byte in data:
+        h ^= byte
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h

@@ -1,0 +1,217 @@
+"""Query estimators over gLava sketches (paper Sections 3.4 and 4).
+
+Every estimator follows the paper's map/reduce recipe: evaluate on each of
+the d sketches independently, merge with Γ (min for weights, AND for
+booleans).  All estimators are batched over queries and jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import GLavaSketch
+from repro.core import reach as reach_mod
+
+
+# ---------------------------------------------------------------------------
+# Edge queries (Section 4.1)
+# ---------------------------------------------------------------------------
+
+
+def edge_query(sketch: GLavaSketch, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """f̃_e(a, b) = min_i ω_i(h_i(a), h_i(b)) for a batch of (a, b) pairs."""
+    r, c = sketch.hash_edges(src, dst)  # (d, Q) each
+    d_idx = jnp.broadcast_to(jnp.arange(r.shape[0])[:, None], r.shape)
+    vals = sketch.counters[d_idx, r, c]  # (d, Q)
+    est = jnp.min(vals, axis=0)
+    if not sketch.config.directed:
+        # Undirected ingest doubled every edge (x,y) & (y,x); each direction
+        # carries the full weight, so no correction is needed — but guard the
+        # self-loop double count.
+        est = jnp.where(src == dst, est / 2.0, est)
+    return est
+
+
+# ---------------------------------------------------------------------------
+# Point queries (Sections 4.2 / 5.2)
+# ---------------------------------------------------------------------------
+
+
+def node_in_flow(sketch: GLavaSketch, keys: jax.Array) -> jax.Array:
+    """f̃_v(a, ←): aggregated weight INTO a-nodes = min_i colsum(M_i[:, h_i(a)])."""
+    col_sums = jnp.sum(sketch.counters, axis=1)  # (d, w_c)
+    h = sketch.col_hash(keys)                    # (d, Q)
+    vals = jnp.take_along_axis(col_sums, h, axis=1)
+    return jnp.min(vals, axis=0)
+
+
+def node_out_flow(sketch: GLavaSketch, keys: jax.Array) -> jax.Array:
+    """f̃_v(a, →): aggregated weight OUT of a-nodes = min_i rowsum(M_i[h_i(a), :])."""
+    row_sums = jnp.sum(sketch.counters, axis=2)  # (d, w_r)
+    h = sketch.row_hash(keys)
+    vals = jnp.take_along_axis(row_sums, h, axis=1)
+    return jnp.min(vals, axis=0)
+
+
+def node_flow(sketch: GLavaSketch, keys: jax.Array) -> jax.Array:
+    """f̃_v(a, ⊥) for undirected graphs: total incident weight."""
+    if sketch.config.directed:
+        return node_in_flow(sketch, keys) + node_out_flow(sketch, keys)
+    # Undirected ingest mirrors each edge, so row sums already count every
+    # incident edge exactly once per direction.
+    return node_out_flow(sketch, keys)
+
+
+def monitor_step(
+    sketch: GLavaSketch,
+    src: jax.Array,
+    dst: jax.Array,
+    weight: jax.Array,
+    watch_key: jax.Array,
+    theta: float,
+) -> Tuple[jax.Array, GLavaSketch]:
+    """Paper Section 4.2's 3-step real-time monitor for f̃_v(a,←) > θ
+    (DoS-style alarm): estimate current in-flow, alarm if the incoming edge
+    pushes it over θ, then update the sketches.  Batched over the edge batch;
+    `watch_key` is the monitored node label a."""
+    inflow = node_in_flow(sketch, watch_key[None])[0]
+    hits = (dst == watch_key).astype(jnp.float32) * weight
+    alarm = inflow + jnp.sum(hits) > theta
+    new_sketch = sketch.update(src, dst, weight)
+    return alarm, new_sketch
+
+
+# ---------------------------------------------------------------------------
+# Path queries (Section 4.3)
+# ---------------------------------------------------------------------------
+
+reach_query = reach_mod.reach_query
+reach_query_precomputed = reach_mod.reach_query_precomputed
+transitive_closure = reach_mod.transitive_closure
+
+
+# ---------------------------------------------------------------------------
+# Aggregate subgraph queries (Sections 3.4 / 4.4)
+# ---------------------------------------------------------------------------
+
+
+def subgraph_query(
+    sketch: GLavaSketch, src: jax.Array, dst: jax.Array
+) -> jax.Array:
+    """f̃(Q) for Q = {(x_1,y_1)..(x_k,y_k)} given as (k,) key arrays.
+
+    Paper semantics (Section 4.4): per sketch i, weight_i(Q) = Σ_k cell_ik if
+    every constituent edge is present in that sketch, else 0 (the revised
+    exact-match semantics); then f̃(Q) = min_i weight_i(Q).
+    """
+    r, c = sketch.hash_edges(src, dst)  # (d, k)
+    d_idx = jnp.broadcast_to(jnp.arange(r.shape[0])[:, None], r.shape)
+    cells = sketch.counters[d_idx, r, c]          # (d, k)
+    present = jnp.all(cells > 0, axis=1)          # (d,)
+    weight_i = jnp.where(present, jnp.sum(cells, axis=1), 0.0)
+    return jnp.min(weight_i)
+
+
+def subgraph_query_opt(
+    sketch: GLavaSketch, src: jax.Array, dst: jax.Array
+) -> jax.Array:
+    """The paper's optimized f̃'(Q) = Σ_k f̃_e(x_k, y_k) — min per edge first,
+    then sum.  Satisfies f̃'(Q) <= f̃(Q) (property-tested), with the revised
+    semantics' zero-propagation applied."""
+    per_edge = edge_query(sketch, src, dst)  # (k,)
+    total = jnp.sum(per_edge)
+    return jnp.where(jnp.any(per_edge == 0), 0.0, total)
+
+
+def wildcard_edge_query(
+    sketch: GLavaSketch,
+    src: Optional[jax.Array],
+    dst: Optional[jax.Array],
+) -> jax.Array:
+    """f̃_e with one wildcard endpoint (paper Section 3.4 extension):
+    f̃_e(x, *) = f̃_v(x, →) and f̃_e(*, y) = f̃_v(y, ←)."""
+    if src is None and dst is None:
+        # (*, *): total stream weight — exact from any single sketch.
+        return jnp.min(jnp.sum(sketch.counters, axis=(1, 2)))[None]
+    if dst is None:
+        return node_out_flow(sketch, src)
+    if src is None:
+        return node_in_flow(sketch, dst)
+    return edge_query(sketch, src, dst)
+
+
+def bound_wildcard_path2(
+    sketch: GLavaSketch, b: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Bound-wildcard query f̃({(*_1, b), (c, *_1)}) — the common-neighbor /
+    triangle-closing count of Example 7 (Q6): estimate Σ_u w(u→b)·w(c→u).
+
+    Per sketch: Σ_u M[u, h(b)] · M[h(c), u] = (row h(c) of M) · (col h(b) of M)
+    — one dot product on the MXU; min over d sketches.  Requires square
+    sketches (shared node space)."""
+    if not sketch.config.is_square:
+        raise ValueError("bound wildcards require a square sketch")
+    hb = sketch.col_hash(b)  # (d, Q)
+    hc = sketch.row_hash(c)  # (d, Q)
+    d_idx = jnp.arange(sketch.depth)[:, None]
+    col_b = sketch.counters[d_idx, :, hb]  # (d, Q, w) — column h(b), as rows
+    row_c = sketch.counters[d_idx, hc, :]  # (d, Q, w)
+    per_sketch = jnp.einsum("dqw,dqw->dq", col_b, row_c)
+    return jnp.min(per_sketch, axis=0)
+
+
+def triangle_query(
+    sketch: GLavaSketch, a: jax.Array, b: jax.Array, c: jax.Array
+) -> jax.Array:
+    """f̃ of the labeled 3-clique {(a,b),(b,c),(c,a)} (Example 7, Q4)."""
+    src = jnp.stack([a, b, c])
+    dst = jnp.stack([b, c, a])
+    return subgraph_query(sketch, src, dst)
+
+
+def global_triangle_estimate(sketch: GLavaSketch) -> jax.Array:
+    """Global (unlabeled) directed-triangle mass estimate: min_i tr(M_i³)/sth.
+    Provided as a graph-analytics demo of "run any algorithm on the sketch" —
+    min over sketches of trace(M³) counts weighted closed 3-walks."""
+    m = sketch.counters
+    m3 = jnp.einsum("dij,djk,dki->d", m, m, m)
+    return jnp.min(m3)
+
+
+# ---------------------------------------------------------------------------
+# Heavy hitters & analytics (supported-queries breadth, Section 3.4 "beyond")
+# ---------------------------------------------------------------------------
+
+
+def heavy_hitter_buckets(sketch: GLavaSketch, theta: float):
+    """Buckets whose in/out flow exceeds θ in ALL d sketches — candidate
+    heavy-hitter node sets (superset of true heavy hitters; no false
+    negatives by the CountMin over-estimate property)."""
+    row_sums = jnp.sum(sketch.counters, axis=2)  # (d, w_r) out-flow
+    col_sums = jnp.sum(sketch.counters, axis=1)  # (d, w_c) in-flow
+    return row_sums > theta, col_sums > theta
+
+
+def check_heavy_keys(sketch: GLavaSketch, keys: jax.Array, theta: float):
+    """Boolean monitor f̃_v(a,←) > θ and f̃_v(a,→) > θ for a key batch."""
+    return node_in_flow(sketch, keys) > theta, node_out_flow(sketch, keys) > theta
+
+
+def sketch_pagerank(
+    sketch: GLavaSketch, damping: float = 0.85, iters: int = 32
+) -> jax.Array:
+    """PageRank run directly on each sketch graph (off-the-shelf algorithm on
+    the summary, paper Section 3.3 Remark).  Returns (d, w) bucket ranks."""
+    m = sketch.counters
+    out = jnp.sum(m, axis=2, keepdims=True)
+    p = jnp.where(out > 0, m / jnp.maximum(out, 1e-9), 0.0)  # row-stochastic
+    w = m.shape[-1]
+    rank = jnp.full((m.shape[0], w), 1.0 / w)
+
+    def body(_, rank):
+        leaked = 1.0 - damping * jnp.einsum("dw,dwk->dk", rank, p).sum(-1, keepdims=True)
+        return damping * jnp.einsum("dw,dwk->dk", rank, p) + leaked / w
+
+    return jax.lax.fori_loop(0, iters, body, rank)

@@ -1,0 +1,74 @@
+"""Reachability on graph sketches via MXU transitive closure.
+
+The paper (Section 4.3) runs an arbitrary black-box ``reach()`` on each
+sketch and ANDs the d answers.  BFS-style reach is pointer-chasing — the
+TPU-shaped equivalent is transitive closure by repeated boolean matrix
+squaring: ``A <- A OR (A @ A > 0)``, ``ceil(log2 w)`` squarings, each a dense
+(w, w) matmul on the MXU.  One closure answers *all-pairs* reachability, so
+the cost amortizes over query batches (DESIGN.md Section 2).
+
+A Pallas blocked implementation lives in ``repro.kernels.closure``; the
+functions here are the pure-jnp system path (and the oracle for that kernel).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def transitive_closure(adj: jax.Array, include_self: bool = True) -> jax.Array:
+    """Boolean transitive closure of (..., w, w) adjacency (float/bool in,
+    bool out).  Batched over leading dims (the d sketches)."""
+    a = (adj > 0)
+    w = adj.shape[-1]
+    if include_self:
+        eye = jnp.eye(w, dtype=bool)
+        a = a | eye
+    n_steps = max(1, math.ceil(math.log2(max(2, w))))
+
+    def body(_, a):
+        af = a.astype(jnp.float32)
+        prod = jnp.einsum("...ik,...kj->...ij", af, af)
+        return a | (prod > 0)
+
+    return jax.lax.fori_loop(0, n_steps, body, a)
+
+
+def reach_query(sketch, src_keys: jax.Array, dst_keys: jax.Array) -> jax.Array:
+    """Batched r̃(a, b): AND over the d sketches of per-sketch reachability
+    (paper Section 4.3 map/reduce).  Requires a square sketch (row and column
+    bucket spaces must coincide for path semantics)."""
+    if not sketch.config.is_square:
+        raise ValueError("reachability requires a square gLava sketch")
+    closure = transitive_closure(sketch.counters)            # (d, w, w) bool
+    r = sketch.row_hash(src_keys)                            # (d, Q)
+    c = sketch.row_hash(dst_keys)                            # (d, Q) same hash
+    d_idx = jnp.broadcast_to(jnp.arange(r.shape[0])[:, None], r.shape)
+    per_sketch = closure[d_idx, r, c]                        # (d, Q)
+    return jnp.all(per_sketch, axis=0)
+
+
+def reach_query_precomputed(sketch, closure: jax.Array, src_keys, dst_keys):
+    """Same as :func:`reach_query` but against a cached closure (serving path:
+    recompute closure once per sketch epoch, answer query batches in O(d)
+    gathers)."""
+    r = sketch.row_hash(src_keys)
+    c = sketch.row_hash(dst_keys)
+    d_idx = jnp.broadcast_to(jnp.arange(r.shape[0])[:, None], r.shape)
+    return jnp.all(closure[d_idx, r, c], axis=0)
+
+
+def k_hop_reach(adj: jax.Array, k: int) -> jax.Array:
+    """Nodes reachable within exactly <= k hops (bounded-path variant used by
+    the GNN sampler integration)."""
+    a = (adj > 0)
+    w = adj.shape[-1]
+    out = a | jnp.eye(w, dtype=bool)
+    for _ in range(max(0, k - 1)):
+        prod = jnp.einsum(
+            "...ik,...kj->...ij", out.astype(jnp.float32), a.astype(jnp.float32)
+        )
+        out = out | (prod > 0)
+    return out

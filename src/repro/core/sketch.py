@@ -1,0 +1,435 @@
+"""gLava graph sketches and the stream-sketch baselines the paper compares to.
+
+The central object is :class:`GLavaSketch` — ``d`` independent graph sketches,
+each a ``w_r × w_c`` weighted adjacency matrix over *hashed node buckets*
+(paper Section 3.3).  Square sketches (``w_r == w_c``, one hash per sketch)
+support graph-algorithm queries (reachability, subgraph matching); non-square
+sketches (paper Section 6.1.2) trade that for lower combined-collision
+probability at equal space.
+
+Ingest backends
+---------------
+``scatter``  the paper-faithful semantics: ``M[h(x), h(y)] += w`` per edge,
+             expressed as one vectorized scatter-add (bit-identical to the
+             sequential loop because ``sum`` is associative/commutative and
+             fp32 adds of integer-valued counters < 2**24 are exact).
+``onehot``   the TPU-native adaptation: for an edge chunk of size B,
+             ``M += OneHot(r)^T @ (OneHot(c) * w)`` — an MXU matmul instead
+             of a scatter (see DESIGN.md Section 2).
+``pallas``   the Pallas kernel implementing the one-hot formulation with
+             explicit VMEM tiling (``repro.kernels.ingest``).
+
+All three agree exactly for integer-valued weights (tested).  Sketches are
+*linear*: ``sketch(S1 + S2) = sketch(S1) + sketch(S2)`` — the property the
+paper's distributed setting (Section 6.3) and our ``psum`` merge rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import (
+    HashFamily,
+    make_hash_family,
+    mix_keys,
+)
+
+DEFAULT_CHUNK = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Static configuration of a gLava sketch."""
+
+    depth: int = 4          # d — number of independent sketches
+    width_rows: int = 1024  # w_r
+    width_cols: int = 1024  # w_c (== width_rows for the square/paper-default)
+    directed: bool = True
+
+    @property
+    def is_square(self) -> bool:
+        return self.width_rows == self.width_cols
+
+    @property
+    def num_cells(self) -> int:
+        return self.depth * self.width_rows * self.width_cols
+
+    def space_bytes(self) -> int:
+        return self.num_cells * 4
+
+    @staticmethod
+    def for_error(epsilon: float, delta: float, square: bool = True) -> "SketchConfig":
+        """Size per paper Thm 1 / Lemma 5.2: w = ceil(e/sqrt(eps)) per side,
+        d = ceil(ln(1/delta))."""
+        w = int(np.ceil(np.e / np.sqrt(epsilon)))
+        d = max(1, int(np.ceil(np.log(1.0 / delta))))
+        return SketchConfig(depth=d, width_rows=w, width_cols=w)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GLavaSketch:
+    """d graph sketches with per-sketch row/col hash functions (a pytree)."""
+
+    counters: jax.Array  # (d, w_r, w_c) float32
+    row_hash: HashFamily
+    col_hash: HashFamily
+    config: SketchConfig = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def depth(self) -> int:
+        return self.config.depth
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def empty(config: SketchConfig, key: jax.Array) -> "GLavaSketch":
+        kr, kc = jax.random.split(key)
+        row_hash = make_hash_family(kr, config.depth, config.width_rows)
+        if config.is_square:
+            # Paper default: ONE hash per sketch maps both endpoints, so the
+            # sketch's row space and column space coincide (required for
+            # running graph algorithms on the sketch).
+            col_hash = row_hash
+        else:
+            col_hash = make_hash_family(kc, config.depth, config.width_cols)
+        counters = jnp.zeros(
+            (config.depth, config.width_rows, config.width_cols), jnp.float32
+        )
+        return GLavaSketch(counters, row_hash, col_hash, config)
+
+    # -- ingest -------------------------------------------------------------
+
+    def hash_edges(self, src: jax.Array, dst: jax.Array):
+        """(B,) uint32 keys -> ((d,B) row buckets, (d,B) col buckets)."""
+        return self.row_hash(src), self.col_hash(dst)
+
+    def update(
+        self,
+        src: jax.Array,
+        dst: jax.Array,
+        weights: Optional[jax.Array] = None,
+        backend: str = "scatter",
+        chunk: int = DEFAULT_CHUNK,
+    ) -> "GLavaSketch":
+        """Ingest a batch of stream elements (x, y; w)."""
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        r, c = self.hash_edges(src, dst)
+        if backend == "scatter":
+            counters = _ingest_scatter(self.counters, r, c, weights)
+        elif backend == "onehot":
+            counters = _ingest_onehot(self.counters, r, c, weights, chunk)
+        elif backend == "pallas":
+            from repro.kernels.ingest import ops as ingest_ops
+
+            counters = ingest_ops.sketch_ingest(self.counters, r, c, weights)
+        else:
+            raise ValueError(f"unknown ingest backend: {backend}")
+        if not self.config.directed:
+            # Undirected: also accumulate the mirrored edge so the adjacency
+            # matrix stays symmetric (paper Section 6.1.1).
+            r2, c2 = self.hash_edges(dst, src)
+            if backend == "scatter":
+                counters = _ingest_scatter(counters, r2, c2, weights)
+            elif backend == "onehot":
+                counters = _ingest_onehot(counters, r2, c2, weights, chunk)
+            else:
+                from repro.kernels.ingest import ops as ingest_ops
+
+                counters = ingest_ops.sketch_ingest(counters, r2, c2, weights)
+        return dataclasses.replace(self, counters=counters)
+
+    def delete(self, src, dst, weights=None, backend: str = "scatter"):
+        """Turnstile deletion (paper Section 6.1.1): negative-weight update."""
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        return self.update(src, dst, -weights, backend=backend)
+
+    def update_sequential(self, src, dst, weights=None) -> "GLavaSketch":
+        """Strictly-sequential per-edge ingest (the paper's literal Step 2).
+
+        Used as the semantics oracle in tests; O(B) sequential steps.
+        """
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        r, c = self.hash_edges(src, dst)
+
+        def body(counters, inputs):
+            ri, ci, wi = inputs
+            d_idx = jnp.arange(self.depth)
+            return counters.at[d_idx, ri, ci].add(wi), None
+
+        counters, _ = jax.lax.scan(body, self.counters, (r.T, c.T, weights))
+        out = dataclasses.replace(self, counters=counters)
+        if not self.config.directed:
+            out = dataclasses.replace(
+                out,
+                counters=_ingest_scatter(
+                    out.counters, *self.hash_edges(dst, src), weights
+                ),
+            )
+        return out
+
+    def update_conservative(self, src, dst, weights=None) -> "GLavaSketch":
+        """Conservative-update (Estan–Varghese) variant — beyond-paper accuracy
+        optimization: bump each edge's cells only up to the new lower bound.
+        Order-dependent, hence sequential (lax.scan)."""
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        r, c = self.hash_edges(src, dst)
+
+        def body(counters, inputs):
+            ri, ci, wi = inputs
+            d_idx = jnp.arange(self.depth)
+            cur = counters[d_idx, ri, ci]          # (d,)
+            est = jnp.min(cur)                      # current min-estimate
+            new = jnp.maximum(cur, est + wi)        # raise to new lower bound
+            return counters.at[d_idx, ri, ci].set(new), None
+
+        counters, _ = jax.lax.scan(body, self.counters, (r.T, c.T, weights))
+        return dataclasses.replace(self, counters=counters)
+
+    # -- linear-sketch algebra ----------------------------------------------
+
+    def merge(self, other: "GLavaSketch") -> "GLavaSketch":
+        """Merge two sketches built with the SAME hash family (linearity)."""
+        return dataclasses.replace(self, counters=self.counters + other.counters)
+
+    def scale(self, gamma: float) -> "GLavaSketch":
+        """Exponential decay of history (streaming time-window variant)."""
+        return dataclasses.replace(self, counters=self.counters * gamma)
+
+    def same_family(self, other: "GLavaSketch") -> bool:
+        return bool(
+            np.array_equal(np.asarray(self.row_hash.a), np.asarray(other.row_hash.a))
+            and np.array_equal(np.asarray(self.row_hash.b), np.asarray(other.row_hash.b))
+            and np.array_equal(np.asarray(self.col_hash.a), np.asarray(other.col_hash.a))
+            and np.array_equal(np.asarray(self.col_hash.b), np.asarray(other.col_hash.b))
+        )
+
+
+# ---------------------------------------------------------------------------
+# ingest implementations
+# ---------------------------------------------------------------------------
+
+
+def _ingest_scatter(counters, r, c, weights):
+    """Vectorized scatter-add of an edge batch into all d sketches."""
+    d = counters.shape[0]
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], r.shape)
+    w = jnp.broadcast_to(weights[None, :], r.shape)
+    return counters.at[d_idx, r, c].add(w)
+
+
+def _ingest_onehot(counters, r, c, weights, chunk: int = DEFAULT_CHUNK):
+    """MXU formulation: M_i += OneHot(r_i)^T @ (OneHot(c_i) * w), chunked."""
+    d, wr, wc = counters.shape
+    batch = r.shape[1]
+    chunk = min(chunk, batch)
+
+    def one_chunk(counters, args):
+        rc, cc, wchunk = args  # (d, C), (d, C), (C,)
+        oh_r = jax.nn.one_hot(rc, wr, dtype=jnp.float32)          # (d, C, wr)
+        oh_c = jax.nn.one_hot(cc, wc, dtype=jnp.float32)          # (d, C, wc)
+        oh_c = oh_c * wchunk[None, :, None]
+        upd = jnp.einsum("dbr,dbc->drc", oh_r, oh_c)
+        return counters + upd, None
+
+    n_full = batch // chunk
+    if n_full:
+        rs = r[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
+        cs = c[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
+        ws = weights[: n_full * chunk].reshape(n_full, chunk)
+        counters, _ = jax.lax.scan(one_chunk, counters, (rs, cs, ws))
+    rem = batch - n_full * chunk
+    if rem:
+        counters, _ = one_chunk(
+            counters, (r[:, n_full * chunk :], c[:, n_full * chunk :], weights[n_full * chunk :])
+        )
+    return counters
+
+
+# ---------------------------------------------------------------------------
+# Baselines: CountMin (edge-keyed), node-stream CountMin, CountSketch, gSketch
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CountMin:
+    """Classic CountMin over *edge keys* (the Example-2 baseline).
+
+    Treats each stream element independently — supports edge-frequency and
+    additive aggregate-subgraph estimates, and (by construction) nothing that
+    needs cross-element connectivity.
+    """
+
+    counters: jax.Array  # (d, w) float32
+    hash: HashFamily
+
+    @staticmethod
+    def empty(depth: int, width: int, key: jax.Array) -> "CountMin":
+        fam = make_hash_family(key, depth, width)
+        return CountMin(jnp.zeros((depth, width), jnp.float32), fam)
+
+    def update(self, src, dst, weights=None) -> "CountMin":
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        k = mix_keys(src, dst)
+        h = self.hash(k)  # (d, B)
+        d_idx = jnp.broadcast_to(jnp.arange(h.shape[0])[:, None], h.shape)
+        w = jnp.broadcast_to(weights[None, :].astype(jnp.float32), h.shape)
+        return dataclasses.replace(self, counters=self.counters.at[d_idx, h].add(w))
+
+    def edge_query(self, src, dst) -> jax.Array:
+        h = self.hash(mix_keys(src, dst))  # (d, Q)
+        vals = jnp.take_along_axis(self.counters, h, axis=1)  # (d, Q)
+        return jnp.min(vals, axis=0)
+
+    def merge(self, other: "CountMin") -> "CountMin":
+        return dataclasses.replace(self, counters=self.counters + other.counters)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NodeCountMin:
+    """CountMin over a node stream (paper Section 5.2's reduction): drop one
+    endpoint of every edge and sketch the remaining node stream.  This is the
+    classic way to answer in/out-flow point queries WITHOUT a graph sketch —
+    our point-query baseline."""
+
+    counters_out: jax.Array  # (d, w) keyed by src
+    counters_in: jax.Array   # (d, w) keyed by dst
+    hash: HashFamily
+
+    @staticmethod
+    def empty(depth: int, width: int, key: jax.Array) -> "NodeCountMin":
+        fam = make_hash_family(key, depth, width)
+        z = jnp.zeros((depth, width), jnp.float32)
+        return NodeCountMin(z, z, fam)
+
+    def update(self, src, dst, weights=None) -> "NodeCountMin":
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        hs, hd = self.hash(src), self.hash(dst)
+        d_idx = jnp.broadcast_to(jnp.arange(hs.shape[0])[:, None], hs.shape)
+        w = jnp.broadcast_to(weights[None, :], hs.shape)
+        return dataclasses.replace(
+            self,
+            counters_out=self.counters_out.at[d_idx, hs].add(w),
+            counters_in=self.counters_in.at[d_idx, hd].add(w),
+        )
+
+    def out_flow(self, keys) -> jax.Array:
+        h = self.hash(keys)
+        return jnp.min(jnp.take_along_axis(self.counters_out, h, axis=1), axis=0)
+
+    def in_flow(self, keys) -> jax.Array:
+        h = self.hash(keys)
+        return jnp.min(jnp.take_along_axis(self.counters_in, h, axis=1), axis=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CountSketch:
+    """Signed sketch (AMS/CountSketch) over edge keys — unbiased estimator,
+    median merge.  Reused by ``repro.train.compression`` for sketched
+    gradient all-reduce (the structure is linear, hence psum-compatible)."""
+
+    counters: jax.Array  # (d, w) float32
+    hash: HashFamily
+
+    @staticmethod
+    def empty(depth: int, width: int, key: jax.Array) -> "CountSketch":
+        fam = make_hash_family(key, depth, width)
+        return CountSketch(jnp.zeros((depth, width), jnp.float32), fam)
+
+    def update(self, keys, weights) -> "CountSketch":
+        h = self.hash(keys)              # (d, B)
+        s = self.hash.signs(keys)        # (d, B) ±1
+        d_idx = jnp.broadcast_to(jnp.arange(h.shape[0])[:, None], h.shape)
+        w = s.astype(jnp.float32) * weights[None, :].astype(jnp.float32)
+        return dataclasses.replace(self, counters=self.counters.at[d_idx, h].add(w))
+
+    def query(self, keys) -> jax.Array:
+        h = self.hash(keys)
+        s = self.hash.signs(keys).astype(jnp.float32)
+        vals = jnp.take_along_axis(self.counters, h, axis=1) * s
+        return jnp.median(vals, axis=0)
+
+    def merge(self, other: "CountSketch") -> "CountSketch":
+        return dataclasses.replace(self, counters=self.counters + other.counters)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GSketch:
+    """gSketch (Zhao et al., PVLDB'11) — CountMin partitioned by a data
+    sample so hot regions of the stream get proportionally wider partitions.
+
+    Simplified faithfully to its core idea: a coarse partitioner hash over
+    the edge's source routes each element to one of ``k`` CountMin partitions
+    whose widths were allocated proportionally to sampled partition mass.
+    """
+
+    partitions: CountMin                 # stacked: counters (k, d, w_max)
+    widths: jax.Array                    # (k,) int32 — active width per part
+    part_hash: HashFamily                # 1-deep hash onto [0, k)
+
+    @staticmethod
+    def from_sample(
+        depth: int,
+        total_width: int,
+        k: int,
+        sample_src: np.ndarray,
+        key: jax.Array,
+    ) -> "GSketch":
+        kp, kc = jax.random.split(key)
+        part_hash = make_hash_family(kp, 1, k)
+        # Allocate widths proportional to sampled mass per partition.
+        part_of = np.asarray(part_hash(jnp.asarray(sample_src, jnp.uint32)))[0]
+        mass = np.bincount(part_of, minlength=k).astype(np.float64) + 1.0
+        widths = np.maximum(8, (total_width * mass / mass.sum()).astype(np.int64))
+        w_max = int(widths.max())
+        fam = make_hash_family(kc, depth, w_max)
+        counters = jnp.zeros((k, depth, w_max), jnp.float32)
+        return GSketch(
+            CountMin(counters, fam), jnp.asarray(widths, jnp.int32), part_hash
+        )
+
+    def update(self, src, dst, weights=None) -> "GSketch":
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        part = self.part_hash(src)[0]                     # (B,)
+        k = mix_keys(src, dst)
+        h_full = self.partitions.hash(k)                  # (d, B) in [0, w_max)
+        w_act = self.widths[part][None, :]                # (1, B)
+        h = h_full % w_act
+        d = h.shape[0]
+        d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], h.shape)
+        p_idx = jnp.broadcast_to(part[None, :], h.shape)
+        w = jnp.broadcast_to(weights[None, :].astype(jnp.float32), h.shape)
+        counters = self.partitions.counters.at[p_idx, d_idx, h].add(w)
+        return dataclasses.replace(
+            self, partitions=dataclasses.replace(self.partitions, counters=counters)
+        )
+
+    def edge_query(self, src, dst) -> jax.Array:
+        part = self.part_hash(src)[0]
+        h = self.partitions.hash(mix_keys(src, dst)) % self.widths[part][None, :]
+        p_idx = jnp.broadcast_to(part[None, :], h.shape)
+        d_idx = jnp.broadcast_to(
+            jnp.arange(h.shape[0])[:, None], h.shape
+        )
+        vals = self.partitions.counters[p_idx, d_idx, h]
+        return jnp.min(vals, axis=0)

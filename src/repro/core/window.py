@@ -1,0 +1,64 @@
+"""Sliding time-window sketches (paper Section 6.1.1 deletions).
+
+The paper supports deleting elements "out of a certain time window" by
+negative updates.  Re-streaming expired edges is usually impossible (they
+were never stored — that's the point of a sketch), so the standard systems
+realization is a ring of K slice-sketches: slice s covers one time slice;
+the window estimate is the sum of live slices (linearity); expiry subtracts
+a whole slice in O(d·w²) without replaying the stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import GLavaSketch, SketchConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlidingWindowSketch:
+    """Ring buffer of K slice sketches sharing one hash family."""
+
+    slices: jax.Array        # (K, d, w_r, w_c)
+    current: jax.Array       # () int32 — index of the active slice
+    template: GLavaSketch    # hash family + config carrier (counters unused)
+
+    @staticmethod
+    def empty(config: SketchConfig, n_slices: int, key: jax.Array):
+        template = GLavaSketch.empty(config, key)
+        slices = jnp.zeros((n_slices,) + template.counters.shape, jnp.float32)
+        return SlidingWindowSketch(slices, jnp.array(0, jnp.int32), template)
+
+    @property
+    def n_slices(self) -> int:
+        return self.slices.shape[0]
+
+    def update(self, src, dst, weights=None, backend: str = "scatter"):
+        """Ingest into the active slice."""
+        active = dataclasses.replace(
+            self.template, counters=self.slices[self.current]
+        )
+        active = active.update(src, dst, weights, backend=backend)
+        return dataclasses.replace(
+            self, slices=self.slices.at[self.current].set(active.counters)
+        )
+
+    def advance(self) -> "SlidingWindowSketch":
+        """Move to the next time slice, expiring the oldest (zeroing the slot
+        the ring wraps onto).  O(d·w²), no stream replay."""
+        nxt = (self.current + 1) % self.n_slices
+        return dataclasses.replace(
+            self,
+            current=nxt,
+            slices=self.slices.at[nxt].set(0.0),
+        )
+
+    def window_sketch(self) -> GLavaSketch:
+        """Materialize the whole-window sketch (sum of live slices)."""
+        return dataclasses.replace(
+            self.template, counters=jnp.sum(self.slices, axis=0)
+        )

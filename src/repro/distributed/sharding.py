@@ -1,0 +1,130 @@
+"""Logical-axis → mesh-axis resolution with divisibility fallback.
+
+Models annotate params/batches with LOGICAL axis names ("vocab", "heads",
+"embed", "batch", ...).  This module maps them onto the production mesh and
+REPLICATES any dim the mesh doesn't divide evenly (e.g. arctic's 56 heads on
+a 16-way model axis — the merged head*dh dim shards instead), recording every
+fallback so the dry-run report can surface them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return {
+        # tensor-parallel dims
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "head_dim": ("model",),   # KV-cache contraction-dim sharding
+        # FSDP / ZeRO-3 dim
+        "embed": dp,
+        # data-parallel dims
+        "batch": dp,
+        "nodes": dp,
+        "edges": dp,
+        "triplets": dp,
+        "candidates": dp,
+        "stream": dp,
+        # sketch rows (paper plane)
+        "sketch_rows": ("model",),
+        "seq": ("model",),        # sequence parallelism (long-context KV)
+    }
+
+
+@dataclasses.dataclass
+class ResolveReport:
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+
+    def note(self, msg: str):
+        self.fallbacks.append(msg)
+
+
+def resolve_pspec(
+    logical: Optional[Tuple],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Dict[str, Tuple[str, ...]],
+    report: Optional[ResolveReport] = None,
+    path: str = "",
+) -> P:
+    """One array's logical names -> PartitionSpec, replicating non-divisible
+    dims."""
+    if logical is None:
+        return P()
+    parts = []
+    used_axes: set = set()
+    for dim, name in zip(shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape and a not in used_axes)
+        if not axes:
+            parts.append(None)
+            continue
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % total != 0:
+            # try a prefix of the axes that divides
+            ok = None
+            for cut in range(len(axes) - 1, 0, -1):
+                t = int(np.prod([mesh.shape[a] for a in axes[:cut]]))
+                if dim % t == 0:
+                    ok = axes[:cut]
+                    break
+            if ok is None:
+                if report is not None:
+                    report.note(
+                        f"{path}: dim {dim} ({name}) % mesh{axes}={total} != 0 -> replicated"
+                    )
+                parts.append(None)
+                continue
+            if report is not None:
+                report.note(f"{path}: dim {dim} ({name}) -> partial axes {ok}")
+            axes = ok
+        used_axes.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def resolve_tree(
+    logical_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    rules: Optional[Dict] = None,
+    report: Optional[ResolveReport] = None,
+) -> Any:
+    """Pytree of logical tuples + pytree of ShapeDtypeStructs -> pytree of
+    NamedShardings (aligned with shape_tree)."""
+    rules = rules or default_rules(mesh)
+    flat_shapes, treedef = jax.tree.flatten(
+        shape_tree, is_leaf=lambda x: hasattr(x, "shape")
+    )
+    flat_logical = treedef.flatten_up_to(logical_tree)
+    paths = [str(i) for i in range(len(flat_shapes))]
+    out = [
+        NamedSharding(
+            mesh,
+            resolve_pspec(
+                lg, tuple(sh.shape), mesh, rules, report, path=p
+            ),
+        )
+        for lg, sh, p in zip(flat_logical, flat_shapes, paths)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def like_tree(logical_leaf_fn, tree) -> Any:
+    """Build a logical tree by mapping a fn over the leaves of `tree`."""
+    return jax.tree.map(logical_leaf_fn, tree)

@@ -1,0 +1,58 @@
+"""gLava → RecSys integration: a NON-SQUARE user×item sketch (paper
+Section 6.1.2) over the interaction stream drives popularity-aware negative
+sampling for BERT4Rec.
+
+Users hash on rows (h1 → [0, m)), items on columns (h2 → [0, p)) — the
+bipartite stream is exactly the paper's non-square use case.  Item
+popularity = f̃_v(item, ←) (in-flow point query); negatives are drawn
+∝ popularity^beta, the standard word2vec/recsys correction, WITHOUT storing
+per-item exact counters (sublinear space)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import GLavaSketch, SketchConfig
+from repro.core import queries
+
+
+class InteractionPopularitySketch:
+    def __init__(
+        self,
+        n_items_hint: int,
+        depth: int = 4,
+        width_users: int = 4096,
+        width_items: int = 8192,
+        seed: int = 0,
+    ):
+        cfg = SketchConfig(depth=depth, width_rows=width_users, width_cols=width_items)
+        self.sketch = GLavaSketch.empty(cfg, jax.random.key(seed))
+        self.n_items = n_items_hint
+        self._ingest = jax.jit(lambda sk, u, i: sk.update(u, i, backend="scatter"))
+
+    def observe(self, user_ids: np.ndarray, item_ids: np.ndarray):
+        self.sketch = self._ingest(
+            self.sketch,
+            jnp.asarray(user_ids, jnp.uint32),
+            jnp.asarray(item_ids, jnp.uint32),
+        )
+
+    def item_popularity(self, items: np.ndarray) -> np.ndarray:
+        est = queries.node_in_flow(self.sketch, jnp.asarray(items, jnp.uint32))
+        return np.asarray(est)
+
+    def sample_negatives(
+        self, k: int, rng, beta: float = 0.75, candidate_pool: int = 65536
+    ) -> np.ndarray:
+        """Draw k popularity^beta-weighted negatives from a uniform candidate
+        pool (two-stage: pool keeps the point-query batch bounded)."""
+        pool = rng.integers(1, self.n_items + 1, candidate_pool).astype(np.uint32)
+        pop = self.item_popularity(pool)
+        w = np.power(np.maximum(pop, 1e-6), beta)
+        w /= w.sum()
+        return rng.choice(pool, size=k, replace=True, p=w).astype(np.int32)
+
+    def user_activity(self, user_ids: np.ndarray) -> np.ndarray:
+        est = queries.node_out_flow(self.sketch, jnp.asarray(user_ids, jnp.uint32))
+        return np.asarray(est)

@@ -1,0 +1,66 @@
+"""gLava → GNN integration: sketch-estimated degrees drive the neighbor
+sampler (DESIGN.md Section 5, Arch-applicability).
+
+On a STREAMED graph the exact degree table does not exist — the training
+pipeline sees edges once.  The gLava point query f̃_v(a, →)/f̃_v(a, ←)
+(paper Section 4.2) estimates per-node degree in O(d) after a single row/col
+flow reduction, and those estimates replace exact degrees in the
+importance-seed sampler.  Over-estimates only (CountMin property) → sampling
+weights are biased up for collided nodes, never starved to zero.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import GLavaSketch, SketchConfig
+from repro.core import queries
+
+
+class StreamingDegreeSketch:
+    """Maintains a gLava sketch over a streamed edge list and serves degree
+    estimates to the sampler."""
+
+    def __init__(self, config: SketchConfig, seed: int = 0, backend: str = "onehot"):
+        self.sketch = GLavaSketch.empty(config, jax.random.key(seed))
+        self.backend = backend
+        self._ingest = jax.jit(
+            lambda sk, s, d: sk.update(s, d, backend="scatter")
+        )
+
+    def observe(self, src: np.ndarray, dst: np.ndarray):
+        self.sketch = self._ingest(
+            self.sketch, jnp.asarray(src, jnp.uint32), jnp.asarray(dst, jnp.uint32)
+        )
+
+    def degree_estimates(self, nodes: np.ndarray, direction: str = "out") -> np.ndarray:
+        keys = jnp.asarray(nodes, jnp.uint32)
+        if direction == "out":
+            est = queries.node_out_flow(self.sketch, keys)
+        else:
+            est = queries.node_in_flow(self.sketch, keys)
+        return np.asarray(est)
+
+    def seed_weights(self, n_nodes: int, alpha: float = 0.5, chunk: int = 65536):
+        """deg^alpha importance weights for ALL nodes (chunked point
+        queries)."""
+        out = np.empty(n_nodes, np.float64)
+        for lo in range(0, n_nodes, chunk):
+            hi = min(n_nodes, lo + chunk)
+            est = self.degree_estimates(np.arange(lo, hi, dtype=np.uint32))
+            out[lo:hi] = np.power(np.maximum(est, 1.0), alpha)
+        return out / out.sum()
+
+
+def sketch_weighted_seeds(
+    deg_sketch: StreamingDegreeSketch,
+    n_nodes: int,
+    batch: int,
+    rng,
+    alpha: float = 0.5,
+) -> np.ndarray:
+    p = deg_sketch.seed_weights(n_nodes, alpha)
+    return rng.choice(n_nodes, size=batch, replace=False, p=p).astype(np.int32)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for one boolean-squaring step of transitive closure."""
+import jax.numpy as jnp
+
+
+def closure_step_ref(a):
+    """a (w, w) f32 in {0,1} -> a OR (a @ a > 0), as f32 {0,1}."""
+    prod = a @ a
+    return jnp.clip(a + (prod > 0).astype(jnp.float32), 0.0, 1.0)

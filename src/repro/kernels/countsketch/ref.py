@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the CountSketch gradient-compression kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def countsketch_ref(vec, h, s, width):
+    """vec (n,), h (d, n) buckets, s (d, n) ±1 -> (d, w) sketch table."""
+    d = h.shape[0]
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], h.shape)
+    vals = s.astype(jnp.float32) * vec[None, :]
+    return jnp.zeros((d, width), jnp.float32).at[d_idx, h].add(vals)

@@ -1,0 +1,36 @@
+"""jit'd wrapper for the flow kernel + the full point-query path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flow.kernel import TILE_C, TILE_R, flows_pallas
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flows(counters, interpret: bool = True):
+    """(d, wr, wc) -> (row_sums (d, wr), col_sums (d, wc))."""
+    d, wr, wc = counters.shape
+    cp = _pad_to(_pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
+    rs, cs = flows_pallas(cp, interpret=interpret)
+    return rs[:, :wr], cs[:, :wc]
+
+
+def node_in_flow(sketch, keys, interpret: bool = True):
+    _, col_sums = flows(sketch.counters, interpret=interpret)
+    h = sketch.col_hash(keys)
+    return jnp.min(jnp.take_along_axis(col_sums, h, axis=1), axis=0)
+
+
+def node_out_flow(sketch, keys, interpret: bool = True):
+    row_sums, _ = flows(sketch.counters, interpret=interpret)
+    h = sketch.row_hash(keys)
+    return jnp.min(jnp.take_along_axis(row_sums, h, axis=1), axis=0)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the point-query flow kernel."""
+import jax.numpy as jnp
+
+
+def flows_ref(counters):
+    """counters (d, wr, wc) -> (out_flows (d, wr) row sums,
+    in_flows (d, wc) col sums) — paper Section 4.2 Step 1."""
+    return jnp.sum(counters, axis=2), jnp.sum(counters, axis=1)

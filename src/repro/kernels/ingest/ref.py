@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the sketch-ingest kernel: the paper's literal
+per-edge scatter M_i[r_i(b), c_i(b)] += w(b), vectorized."""
+import jax.numpy as jnp
+
+
+def sketch_ingest_ref(counters, rows, cols, weights):
+    """counters (d, wr, wc) f32; rows/cols (d, B) int32; weights (B,) f32."""
+    d = counters.shape[0]
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], rows.shape)
+    w = jnp.broadcast_to(weights[None, :].astype(jnp.float32), rows.shape)
+    return counters.at[d_idx, rows, cols].add(w)

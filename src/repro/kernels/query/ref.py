@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched edge-query kernel."""
+import jax.numpy as jnp
+
+
+def edge_query_ref(counters, rows, cols):
+    """counters (d, wr, wc); rows/cols (d, Q) -> per-sketch cell values (d, Q).
+    (The min-over-d Γ merge happens outside — ops.py applies it.)"""
+    d = counters.shape[0]
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], rows.shape)
+    return counters[d_idx, rows, cols]

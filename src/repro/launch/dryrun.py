@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import all_cells, get_arch
+from repro.distributed.sharding import ResolveReport, resolve_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.roofline.analysis import (
+    model_flops_for,
+    parse_collectives,
+    roofline_from_cost,
+)
+
+"""Multi-pod dry-run: ``.lower().compile()`` for every (architecture ×
+input-shape × mesh) cell on the production meshes, recording
+``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()`` (FLOPs/bytes)
+and the collective schedule (parsed from the post-SPMD HLO) for the roofline
+report.  Results land in results/dryrun/<arch>__<shape>__<mesh>.json and are
+resumable cell-by-cell.
+"""
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if out:
+        args = out.get("argument_size_in_bytes", 0)
+        alias = out.get("alias_size_in_bytes", 0)
+        out["peak_bytes_per_device_est"] = (
+            args + out.get("output_size_in_bytes", 0) - alias
+            + out.get("temp_size_in_bytes", 0)
+        )
+    return out or None
+
+
+def _sharded_bytes(sds_tree, sharding_tree) -> int:
+    """Exact per-device bytes of a sharded pytree (shard_shape is exact)."""
+    total = 0
+    flat_s, treedef = jax.tree.flatten(sds_tree)
+    flat_sh = treedef.flatten_up_to(sharding_tree)
+    for sds, sh in zip(flat_s, flat_sh):
+        shard = sh.shard_shape(sds.shape)
+        total += int(np.prod(shard)) * sds.dtype.itemsize
+    return total
+
+
+def modeled_memory(bundle, state_sds, state_sh, batch_sh) -> dict:
+    """Analytic per-device memory: params+opt+inputs are EXACT from the
+    shardings; activations estimated for LM train (remat carry chain).  The
+    XLA temp number on this host is inflated by CPU bf16→f32 legalization
+    and sequential thunk live-ranges — see EXPERIMENTS.md §Dry-run."""
+    state_b = _sharded_bytes(state_sds, state_sh)
+    batch_b = _sharded_bytes(bundle.batch_specs, batch_sh)
+    act_b = 0
+    cfg = bundle.config
+    if bundle.kind == "train" and hasattr(cfg, "n_layers") and hasattr(cfg, "d_model"):
+        b, s1 = bundle.batch_specs["tokens"].shape
+        # remat stores the layer carry: (B/dp, S/model, D) bf16 per layer
+        carry = (b // 16) * ((s1 - 1) // 16) * cfg.d_model * 2
+        act_b = carry * cfg.n_layers
+    return {
+        "state_bytes_per_device": state_b,
+        "input_bytes_per_device": batch_b,
+        "activation_bytes_per_device_est": act_b,
+        "modeled_total_per_device": state_b + batch_b + act_b,
+        "fits_16GB": (state_b + batch_b + act_b) <= 16e9,
+    }
+
+
+def _make_jit(bundle, state_sh, batch_sh, mesh, report):
+    if bundle.is_train:
+        return jax.jit(
+            bundle.step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+    out_sh = None
+    if bundle.out_logical is not None:
+        out_shapes = jax.eval_shape(
+            bundle.step, bundle.state_specs(), bundle.batch_specs
+        )
+        out_sh = resolve_tree(bundle.out_logical, out_shapes, mesh, report=report)
+    return jax.jit(bundle.step, in_shardings=(state_sh, batch_sh), out_shardings=out_sh)
+
+
+def _cost_of(bundle, mesh, report, rules=None):
+    """lower+compile one bundle, return (cost dict, collectives dict)."""
+    state_sds = bundle.state_specs()
+    state_sh = resolve_tree(bundle.state_logical, state_sds, mesh, rules, report=report)
+    batch_sh = resolve_tree(bundle.batch_logical, bundle.batch_specs, mesh, rules, report=report)
+    jf = _make_jit(bundle, state_sh, batch_sh, mesh, report)
+    with mesh:
+        compiled = jf.lower(state_sds, bundle.batch_specs).compile()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    colls = parse_collectives(compiled.as_text())
+    return dict(cost), colls
+
+
+def extrapolate_lm_cost(
+    arch: str, shape: str, mesh, optimized: bool = False, rules=None
+):
+    """XLA cost analysis counts a while (lax.scan) body ONCE, so the scanned
+    L-layer program under-reports flops/bytes/collectives by ~L×.  Layers are
+    identical, so cost(L) is exactly affine in L: compile the UNROLLED model
+    at L=1 and L=2, fit, and evaluate at the real depth.  Returns
+    (cost, collectives, detail)."""
+    import dataclasses as dc
+
+    from repro.configs import get_arch as _ga
+
+    full_cfg = _ga(arch).config
+    L = full_cfg.n_layers
+    report = ResolveReport()
+    costs, colls = {}, {}
+    for k in (1, 2):
+        cfg_k = dc.replace(full_cfg, n_layers=k, scan_layers=False)
+        b = build_step(
+            arch, shape, mesh=mesh, config_override=cfg_k, optimized=optimized
+        )
+        costs[k], colls[k] = _cost_of(b, mesh, report, rules=rules)
+
+    def fit(m1, m2):
+        bb = m2 - m1
+        return m1 - bb + bb * L  # a + b*L with a = m1 - b
+
+    keys = set(costs[1]) & set(costs[2])
+    cost_L = {
+        k: float(fit(float(costs[1][k]), float(costs[2][k])))
+        for k in keys
+        if isinstance(costs[1][k], (int, float))
+    }
+    coll_L = {}
+    for op in colls[1]:
+        coll_L[op] = {
+            "count": max(0.0, fit(colls[1][op]["count"], colls[2][op]["count"])),
+            "bytes": max(0.0, fit(colls[1][op]["bytes"], colls[2][op]["bytes"])),
+        }
+    return cost_L, coll_L, {"depths_compiled": [1, 2], "extrapolated_to": L}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: Path, save_hlo: bool = False):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = outdir / f"{arch}__{shape}__{mesh_name}.json"
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "n_chips": 512 if multi_pod else 256,
+        "status": "running",
+    }
+    spec = get_arch(arch)
+    sh = spec.shapes[shape]
+    if sh.skip:
+        rec.update(status="skipped", skip_reason=sh.skip)
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {arch}/{shape}: {sh.skip}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = build_step(arch, shape, smoke=False, mesh=mesh)
+    report = ResolveReport()
+    state_sds = bundle.state_specs()
+    state_sh = resolve_tree(bundle.state_logical, state_sds, mesh, report=report)
+    batch_sh = resolve_tree(bundle.batch_logical, bundle.batch_specs, mesh, report=report)
+    rec["sharding_fallbacks"] = report.fallbacks
+    rec["notes"] = bundle.notes
+
+    rec["modeled_memory"] = modeled_memory(bundle, state_sds, state_sh, batch_sh)
+    jf = _make_jit(bundle, state_sh, batch_sh, mesh, report)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jf.lower(state_sds, bundle.batch_specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+
+    mem = _mem_dict(compiled)
+    print(compiled.memory_analysis())   # proves it fits (per-device bytes)
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+    text = compiled.as_text()
+    colls = parse_collectives(text)
+    if save_hlo:
+        (outdir / f"{arch}__{shape}__{mesh_name}.hlo.txt").write_text(text)
+    rec["hlo_chars"] = len(text)
+    del text
+
+    mf = model_flops_for(bundle)
+    cost_used, colls_used = dict(cost), colls
+    spec_family = get_arch(arch).family
+    if spec_family == "lm" and not multi_pod:
+        # roofline-grade costs: unrolled depth extrapolation (single-pod only
+        # — the roofline table is single-pod per the spec)
+        try:
+            cost_used, colls_used, detail = extrapolate_lm_cost(arch, shape, mesh)
+            rec["cost_extrapolation"] = detail
+        except Exception as e:
+            rec["cost_extrapolation"] = {"failed": repr(e)}
+    rf = roofline_from_cost(cost_used, colls_used, mesh.size, mf)
+    rec.update(
+        status="ok",
+        memory=mem,
+        cost_scan_module={
+            k: float(v) for k, v in cost.items() if isinstance(v, (int, float))
+        },
+        cost={k: float(v) for k, v in cost_used.items()},
+        collectives=colls_used,
+        collectives_scan_module=colls,
+        roofline=rf.to_dict(),
+    )
+    out_path.write_text(json.dumps(rec, indent=2))
+    mm = rec["modeled_memory"]
+    peak = (mem or {}).get("peak_bytes_per_device_est")
+    xla = "" if peak is None else f" xla_peak={peak/1e9:.2f}GB"
+    print(
+        f"[dryrun] OK {arch}/{shape}/{mesh_name}: compile={rec['compile_s']}s "
+        f"dominant={rf.dominant} frac={rf.roofline_fraction:.3f} "
+        f"modeled/dev={mm['modeled_total_per_device']/1e9:.2f}GB "
+        f"({'FITS' if mm['fits_16GB'] else 'OVER'}){xla}"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = (
+        all_cells(include_skipped=True)
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            out_path = outdir / f"{arch}__{shape}__{mesh_name}.json"
+            if args.skip_done and out_path.exists():
+                try:
+                    if json.loads(out_path.read_text()).get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] cached {arch}/{shape}/{mesh_name}")
+                        continue
+                except Exception:
+                    pass
+            try:
+                run_cell(arch, shape, mp, outdir, save_hlo=args.save_hlo)
+            except Exception as e:  # record the failure; it is a bug to fix
+                failures.append((arch, shape, mesh_name, repr(e)))
+                out_path.write_text(
+                    json.dumps(
+                        {
+                            "arch": arch,
+                            "shape": shape,
+                            "mesh": mesh_name,
+                            "status": "failed",
+                            "error": repr(e),
+                            "traceback": traceback.format_exc()[-4000:],
+                        },
+                        indent=2,
+                    )
+                )
+                print(f"[dryrun] FAIL {arch}/{shape}/{mesh_name}: {e!r}")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", *f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("[dryrun] all requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes.  A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod.
+
+    The dry-run host exposes 512 placeholder devices; the single-pod mesh
+    uses the first 256 of them."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — launch "
+            "via repro.launch.dryrun (it sets xla_force_host_platform_device_count)"
+        )
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod axis included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch.dryrun import extrapolate_lm_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.roofline.analysis import model_flops_for, roofline_from_cost
+
+"""§Perf hillclimb runner: measure a (arch × shape) cell's roofline terms
+under a named variant and append the hypothesis→before→after record to
+results/perf/<arch>__<shape>.json."""
+
+
+def measure(
+    arch: str,
+    shape: str,
+    optimized: bool,
+    no_fsdp: bool = False,
+    replicate_inputs: bool = False,
+):
+    mesh = make_production_mesh()
+    rules = None
+    if no_fsdp or replicate_inputs:
+        from repro.distributed.sharding import default_rules
+
+        rules = default_rules(mesh)
+        if no_fsdp:
+            rules["embed"] = ()  # params TP-only; opt state follows params
+        if replicate_inputs:
+            for k in ("nodes", "edges", "triplets"):
+                rules[k] = ()
+    spec = get_arch(arch)
+    if spec.family == "lm":
+        cost, colls, detail = extrapolate_lm_cost(
+            arch, shape, mesh, optimized=optimized, rules=rules
+        )
+    else:
+        from repro.distributed.sharding import ResolveReport
+        from repro.launch.dryrun import _cost_of
+
+        bundle0 = build_step(arch, shape, mesh=mesh)
+        cost, colls = _cost_of(bundle0, mesh, ResolveReport(), rules=rules)
+    bundle = build_step(arch, shape, mesh=mesh, optimized=optimized)
+    rf = roofline_from_cost(cost, colls, mesh.size, model_flops_for(bundle))
+    return rf, colls
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, help="label, e.g. baseline | a2a-dispatch")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate the embed/FSDP dim (TP-only params)")
+    ap.add_argument("--replicate-inputs", action="store_true",
+                    help="GNN: replicate node/edge inputs (kill reshard collectives)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config field override, e.g. attn_q_chunk=None")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    path = outdir / f"{args.arch}__{args.shape}.json"
+    log = json.loads(path.read_text()) if path.exists() else {"iterations": []}
+
+    if args.override:
+        import ast
+
+        from repro.launch import steps as steps_mod
+
+        for ov in args.override:
+            k, v = ov.split("=", 1)
+            steps_mod.PERF_OVERRIDES[k] = ast.literal_eval(v)
+    rf, colls = measure(
+        args.arch, args.shape, args.optimized, args.no_fsdp, args.replicate_inputs
+    )
+    entry = {
+        "variant": args.variant,
+        "optimized_flag": args.optimized,
+        "no_fsdp": args.no_fsdp,
+        "overrides": args.override,
+        "hypothesis": args.hypothesis,
+        "roofline": rf.to_dict(),
+        "collectives": colls,
+    }
+    log["iterations"].append(entry)
+    path.write_text(json.dumps(log, indent=2))
+    print(
+        f"[perf] {args.arch}/{args.shape} [{args.variant}]: "
+        f"compute={rf.compute_s:.2f}s memory={rf.memory_s:.2f}s "
+        f"collective={rf.collective_s:.2f}s dominant={rf.dominant} "
+        f"frac={rf.roofline_fraction:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

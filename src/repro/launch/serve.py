@@ -1,0 +1,47 @@
+"""Serving driver: ``python -m repro.launch.serve`` runs the gLava sketch
+service against a synthetic network-traffic stream with a mixed query
+workload and prints throughput/accuracy stats."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.sketch import SketchConfig
+from repro.data.graphs import edge_stream
+from repro.serve.engine import SketchServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=1024)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--nodes", type=int, default=100_000)
+    ap.add_argument("--edges", type=int, default=500_000)
+    ap.add_argument("--batch", type=int, default=50_000)
+    ap.add_argument("--window-slices", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
+    server = SketchServer(cfg, window_slices=args.window_slices or None)
+    rng = np.random.default_rng(0)
+    stream = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
+
+    for lo in range(0, args.edges, args.batch):
+        hi = min(args.edges, lo + args.batch)
+        server.ingest(
+            stream["src"][lo:hi], stream["dst"][lo:hi], stream["weight"][lo:hi]
+        )
+        # mixed query workload between ingest batches
+        qs = rng.integers(0, args.nodes, 1024).astype(np.uint32)
+        qd = rng.integers(0, args.nodes, 1024).astype(np.uint32)
+        server.edge_frequency(qs, qd)
+        server.in_flow(qs[:256])
+        server.reachable(qs[:64], qd[:64])
+
+    stats = server.stats.summary()
+    print("[serve] " + " ".join(f"{k}={v:,.1f}" for k, v in stats.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,655 @@
+"""Step factory: one (arch × shape) cell -> a jit-able step with init fns,
+logical sharding specs, dry-run input specs, and concrete smoke batches.
+
+This is the seam between the model zoo, the distribution layer and the
+dry-run: ``build_step(arch, shape)`` returns a :class:`StepBundle` whose
+``input_specs()`` are ShapeDtypeStructs (no allocation — full production
+shapes) and whose ``make_batch()`` materializes reduced concrete data for
+CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec, get_arch, triplet_budget
+from repro.data import graphs as graph_data
+from repro.data import lm as lm_data
+from repro.data import recsys as recsys_data
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet, gat, graphsage, schnet
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn.sampler import sampled_block_sizes
+from repro.models.recsys import bert4rec
+from repro.train import optimizer as opt_mod
+
+F32, I32, U32, BF16 = jnp.float32, jnp.int32, jnp.uint32, jnp.bfloat16
+
+# §Perf experiment channel: launch/perf.py drops config-field overrides here
+# (e.g. {"attn_q_chunk": None}) so hillclimb variants need no signature churn.
+PERF_OVERRIDES: dict = {}
+
+
+@dataclasses.dataclass
+class StepBundle:
+    arch_id: str
+    shape_name: str
+    kind: str
+    config: Any
+    init_state: Callable[[jax.Array], Any]
+    step: Callable
+    state_logical: Any
+    batch_logical: Any
+    batch_specs: Dict[str, jax.ShapeDtypeStruct]
+    make_batch: Callable[[np.random.Generator], Dict[str, np.ndarray]]
+    is_train: bool
+    out_logical: Any = None  # serve kinds: logical specs for outputs
+    notes: str = ""
+
+    def input_specs(self):
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        return self.batch_specs
+
+    def state_specs(self):
+        return jax.eval_shape(self.init_state, jax.random.key(0))
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape")
+        else x,
+        tree,
+    )
+
+
+def _opt_config(n_params: int) -> opt_mod.AdamWConfig:
+    """Memory-fit heuristic (DESIGN.md Section 4): >100B params -> bf16
+    moments (arctic on one pod would not fit fp32 m+v)."""
+    if n_params > 100e9:
+        return opt_mod.AdamWConfig(m_dtype=BF16, v_dtype=BF16)
+    return opt_mod.AdamWConfig()
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+
+def _lm_prod_config(
+    cfg: tfm.TransformerConfig, mesh, kind: str, optimized: bool = False
+):
+    """Production knobs: chunked attention + remat + activation SP + MoE
+    dispatch-buffer sharding.  ``optimized=True`` switches on the §Perf
+    hillclimb levers (shard_map EP all-to-all dispatch); the default is the
+    paper-faithful-parallelization BASELINE so both stay measurable."""
+    from jax.sharding import NamedSharding
+
+    act = None
+    moe = cfg.moe
+    if mesh is not None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if kind in ("train", "prefill"):
+            # NamedSharding (not bare PartitionSpec): usable without a
+            # context mesh inside with_sharding_constraint
+            act = NamedSharding(mesh, P(dp, "model", None))  # (batch, SP, ·)
+        if moe is not None:
+            # (E, C, D) dispatch/combine buffers: EP shards E, otherwise C
+            # over the dp axes (unconstrained they replicate: +32 GB/chip).
+            espec = "model" if moe.partition == "expert" else None
+            moe = dataclasses.replace(
+                moe, dispatch_pspec=NamedSharding(mesh, P(espec, dp, None))
+            )
+            if optimized and kind in ("train", "prefill"):
+                moe = dataclasses.replace(moe, shard_dispatch=True, mesh=mesh)
+    out = dataclasses.replace(
+        cfg,
+        attn_q_chunk=512 if kind in ("train", "prefill") else None,
+        remat=kind == "train",
+        act_pspec=act,
+        moe=moe,
+        attn_window_slicing=optimized and cfg.sliding_window is not None,
+        attn_halo_mesh=(
+            mesh
+            if optimized and cfg.sliding_window is not None
+            and kind in ("train", "prefill")
+            else None
+        ),
+    )
+    if PERF_OVERRIDES:
+        out = dataclasses.replace(out, **PERF_OVERRIDES)
+    return out
+
+
+def _build_lm(
+    spec: ArchSpec, shape: ShapeSpec, smoke: bool, mesh, optimized: bool = False
+) -> StepBundle:
+    cfg = (
+        spec.smoke_config
+        if smoke
+        else _lm_prod_config(spec.config, mesh, shape.kind, optimized=optimized)
+    )
+    p = shape.params
+    if smoke:
+        batch = 2
+        seq = 16 if shape.kind != "train" else 12
+    else:
+        batch, seq = p["global_batch"], p["seq_len"]
+
+    pspec = tfm.param_specs(cfg)
+    opt_cfg = _opt_config(cfg.param_count())
+
+    if shape.kind == "train":
+
+        def init_state(key):
+            params = tfm.init_params(cfg, key)
+            return {"params": params, "opt": opt_mod.init_adamw(opt_cfg, params)}
+
+        def step(state, batch_in):
+            def lfn(params):
+                return tfm.loss_fn(cfg, params, batch_in["tokens"])
+
+            (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(
+                state["params"]
+            )
+            params, opt, om = opt_mod.apply_adamw(
+                opt_cfg, state["opt"], state["params"], grads
+            )
+            return {"params": params, "opt": opt}, {"loss": loss, **metrics, **om}
+
+        state_logical = {
+            "params": pspec,
+            "opt": opt_mod.AdamWState(step=None, m=pspec, v=pspec),
+        }
+        batch_logical = {"tokens": ("batch", None)}
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), I32)}
+
+        def make_batch(rng):
+            gen = lm_data.MarkovTokens(cfg.vocab, seed=0)
+            return {"tokens": gen.batch(batch, seq + 1, rng)}
+
+        return StepBundle(
+            spec.arch_id, shape.name, shape.kind, cfg, init_state, step,
+            state_logical, batch_logical, batch_specs, make_batch, True,
+        )
+
+    if shape.kind == "prefill":
+
+        def init_state(key):
+            return tfm.init_params(cfg, key)
+
+        def step(params, batch_in):
+            return tfm.prefill(cfg, params, batch_in["tokens"], max_seq=seq)
+
+        batch_logical = {"tokens": ("batch", None)}
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), I32)}
+
+        def make_batch(rng):
+            gen = lm_data.MarkovTokens(cfg.vocab, seed=0)
+            return {"tokens": gen.batch(batch, seq, rng)}
+
+        prefill_cap = min(tfm.cache_capacity(cfg, seq), seq)
+        out_logical = (
+            ("batch", "vocab"),  # logits
+            {
+                "k": (None, "batch", None, None, "head_dim"),
+                "v": (None, "batch", None, None, "head_dim"),
+                "len": None,
+            },
+        )
+        return StepBundle(
+            spec.arch_id, shape.name, shape.kind, cfg, init_state, step,
+            pspec, batch_logical, batch_specs, make_batch, False,
+            out_logical=out_logical,
+        )
+
+    # decode: one new token against a KV cache of seq_len
+    cap = tfm.cache_capacity(cfg, seq)
+
+    def init_state(key):
+        return tfm.init_params(cfg, key)
+
+    def step(params, batch_in):
+        return tfm.decode_step(cfg, params, batch_in["token"], batch_in["cache"])
+
+    cache_logical = {
+        "k": (None, "batch", "seq", None, "head_dim"),
+        "v": (None, "batch", "seq", None, "head_dim"),
+        "len": None,
+    }
+    batch_logical = {"token": ("batch",), "cache": cache_logical}
+    cshape = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    batch_specs = {
+        "token": jax.ShapeDtypeStruct((batch,), I32),
+        "cache": {
+            "k": jax.ShapeDtypeStruct(cshape, cfg.compute_dtype),
+            "v": jax.ShapeDtypeStruct(cshape, cfg.compute_dtype),
+            "len": jax.ShapeDtypeStruct((), I32),
+        },
+    }
+
+    def make_batch(rng):
+        return {
+            "token": rng.integers(0, cfg.vocab, batch).astype(np.int32),
+            "cache": {
+                "k": rng.normal(0, 1, cshape).astype(np.float32).astype(cfg.compute_dtype),
+                "v": rng.normal(0, 1, cshape).astype(np.float32).astype(cfg.compute_dtype),
+                "len": np.asarray(seq - 1, np.int32),
+            },
+        }
+
+    return StepBundle(
+        spec.arch_id, shape.name, shape.kind, cfg, init_state, step,
+        pspec, batch_logical, batch_specs, make_batch, False,
+        out_logical=(("batch", "vocab"), cache_logical),
+        notes=f"cache capacity {cap} ({'ring/SWA' if cap < seq else 'full'})",
+    )
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+_MOL_ATOM_TYPES = 100
+_MOL_FEAT = 16  # continuous features for sage/gat on the molecule shape
+
+
+def _pad512(x: int) -> int:
+    """Pad graph dims to a 512 multiple so the dp axes always divide them
+    (padding carries node_mask/edge_mask = False)."""
+    return ((x + 511) // 512) * 512
+
+
+def _gnn_shape_dims(spec: ArchSpec, shape: ShapeSpec, smoke: bool):
+    p = dict(shape.params)
+    if shape.kind == "gnn_full":
+        if smoke:
+            p.update(n_nodes=64, n_edges=256, d_feat=16, n_classes=4)
+        else:
+            p["n_real_nodes"], p["n_real_edges"] = p["n_nodes"], p["n_edges"]
+            p.update(n_nodes=_pad512(p["n_nodes"]), n_edges=_pad512(p["n_edges"]))
+        return p
+    if shape.kind == "gnn_minibatch":
+        if smoke:
+            p.update(batch_nodes=8, fanouts=(3, 2), d_feat=16, n_classes=4)
+        n_nodes, n_edges = sampled_block_sizes(p["batch_nodes"], p["fanouts"])
+        p.update(n_nodes=n_nodes, n_edges=n_edges)
+        return p
+    # molecule
+    if smoke:
+        p.update(batch=4, n_nodes=10, n_edges=16)
+    return p
+
+
+def _gnn_config(spec: ArchSpec, shape: ShapeSpec, smoke: bool, dims):
+    cfg = spec.smoke_config if smoke else spec.config
+    molecular = spec.arch_id in ("schnet", "dimenet")
+    if shape.kind == "gnn_molecule":
+        if molecular:
+            return dataclasses.replace(
+                cfg, feature_mode="embed_types", task="graph_reg", out_dim=1
+            )
+        return dataclasses.replace(cfg, d_in=_MOL_FEAT, out_dim=1)
+    if molecular:
+        return dataclasses.replace(
+            cfg,
+            feature_mode="project",
+            d_in=dims["d_feat"],
+            task="node_class",
+            out_dim=dims["n_classes"],
+        )
+    return dataclasses.replace(cfg, d_in=dims["d_feat"], out_dim=dims["n_classes"])
+
+
+def _gnn_forward(arch_id: str, cfg, params, g: GraphBatch, n_graphs: int):
+    if arch_id == "graphsage-reddit":
+        return graphsage.forward(cfg, params, g)
+    if arch_id == "gat-cora":
+        return gat.forward(cfg, params, g)
+    if arch_id == "schnet":
+        if cfg.task == "graph_reg":
+            return schnet.forward_ngraphs(cfg, params, g, n_graphs)
+        return schnet.forward(cfg, params, g)
+    if arch_id == "dimenet":
+        return dimenet.forward(cfg, params, g, n_graphs=n_graphs)
+    raise ValueError(arch_id)
+
+
+def _gnn_init(arch_id: str, cfg, key):
+    mod = {
+        "graphsage-reddit": graphsage,
+        "gat-cora": gat,
+        "schnet": schnet,
+        "dimenet": dimenet,
+    }[arch_id]
+    return mod.init_params(cfg, key)
+
+
+def _build_gnn(spec: ArchSpec, shape: ShapeSpec, smoke: bool, mesh) -> StepBundle:
+    dims = _gnn_shape_dims(spec, shape, smoke)
+    cfg = _gnn_config(spec, shape, smoke, dims)
+    arch_id = spec.arch_id
+    molecular = arch_id in ("schnet", "dimenet")
+    needs_triplets = arch_id == "dimenet"
+    is_mol = shape.kind == "gnn_molecule"
+    n = dims["n_nodes"] if not is_mol else dims["batch"] * dims["n_nodes"]
+    e = dims["n_edges"] if not is_mol else dims["batch"] * dims["n_edges"]
+    n_graphs = dims.get("batch", 1) if is_mol else 1
+    t = triplet_budget(e) if needs_triplets else 0
+    opt_cfg = _opt_config(0)
+
+    feat_spec = (
+        jax.ShapeDtypeStruct((n,), I32)
+        if (molecular and is_mol)
+        else jax.ShapeDtypeStruct((n, dims.get("d_feat", _MOL_FEAT)), F32)
+    )
+    gb_specs = dict(
+        node_feat=feat_spec,
+        edge_src=jax.ShapeDtypeStruct((e,), I32),
+        edge_dst=jax.ShapeDtypeStruct((e,), I32),
+        node_mask=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+    )
+    gb_logical = dict(
+        node_feat=("nodes", None) if feat_spec.ndim == 2 else ("nodes",),
+        edge_src=("edges",),
+        edge_dst=("edges",),
+        node_mask=("nodes",),
+        edge_mask=("edges",),
+    )
+    if molecular:
+        gb_specs["positions"] = jax.ShapeDtypeStruct((n, 3), F32)
+        gb_logical["positions"] = ("nodes", None)
+    if is_mol:
+        gb_specs["graph_ids"] = jax.ShapeDtypeStruct((n,), I32)
+        gb_logical["graph_ids"] = ("nodes",)
+    if needs_triplets:
+        gb_specs["triplets"] = {
+            "in": jax.ShapeDtypeStruct((t,), I32),
+            "out": jax.ShapeDtypeStruct((t,), I32),
+            "mask": jax.ShapeDtypeStruct((t,), F32),
+        }
+        gb_logical["triplets"] = {
+            "in": ("triplets",),
+            "out": ("triplets",),
+            "mask": ("triplets",),
+        }
+
+    if is_mol:
+        label_spec = jax.ShapeDtypeStruct((n_graphs, 1), F32)
+        label_logical = (None, None)
+    else:
+        label_spec = jax.ShapeDtypeStruct((n,), I32)
+        label_logical = ("nodes",)
+    batch_specs = {
+        "graph": gb_specs,
+        "labels": label_spec,
+        "loss_mask": jax.ShapeDtypeStruct(
+            (n_graphs,) if is_mol else (n,), F32
+        ),
+    }
+    batch_logical = {
+        "graph": gb_logical,
+        "labels": label_logical,
+        "loss_mask": (None,) if is_mol else ("nodes",),
+    }
+
+    def to_graphbatch(d):
+        return GraphBatch(
+            node_feat=d["node_feat"],
+            edge_src=d["edge_src"],
+            edge_dst=d["edge_dst"],
+            node_mask=d["node_mask"],
+            edge_mask=d["edge_mask"],
+            positions=d.get("positions"),
+            graph_ids=d.get("graph_ids"),
+            triplets=d.get("triplets"),
+        )
+
+    def init_state(key):
+        params = _gnn_init(arch_id, cfg, key)
+        return {"params": params, "opt": opt_mod.init_adamw(opt_cfg, params)}
+
+    def step(state, batch_in):
+        g = to_graphbatch(batch_in["graph"])
+
+        def lfn(params):
+            out = _gnn_forward(arch_id, cfg, params, g, n_graphs)
+            if is_mol and not molecular:
+                # sage/gat emit per-node values -> mean-readout per graph
+                num = jax.ops.segment_sum(
+                    out * g.node_mask[:, None], g.graph_ids, num_segments=n_graphs
+                )
+                cnt = jax.ops.segment_sum(
+                    g.node_mask.astype(jnp.float32), g.graph_ids, num_segments=n_graphs
+                )
+                out = num / jnp.maximum(cnt, 1.0)[:, None]
+            if is_mol:  # graph regression (MSE)
+                err = (out - batch_in["labels"]) ** 2
+                loss = jnp.sum(err[:, 0] * batch_in["loss_mask"]) / jnp.maximum(
+                    jnp.sum(batch_in["loss_mask"]), 1.0
+                )
+            else:  # masked node classification
+                logits = out.astype(jnp.float32)
+                logz = jax.nn.logsumexp(logits, -1)
+                gold = jnp.take_along_axis(
+                    logits, batch_in["labels"][:, None].astype(jnp.int32), axis=1
+                )[:, 0]
+                loss = jnp.sum((logz - gold) * batch_in["loss_mask"]) / jnp.maximum(
+                    jnp.sum(batch_in["loss_mask"]), 1.0
+                )
+            return loss, {"xent": loss}
+
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(state["params"])
+        params, opt, om = opt_mod.apply_adamw(opt_cfg, state["opt"], state["params"], grads)
+        return {"params": params, "opt": opt}, {"loss": loss, **metrics, **om}
+
+    param_logical = jax.tree.map(lambda _: None, jax.eval_shape(
+        lambda k: _gnn_init(arch_id, cfg, k), jax.random.key(0)
+    ))  # GNN params are tiny -> replicated
+    state_logical = {
+        "params": param_logical,
+        "opt": opt_mod.AdamWState(step=None, m=param_logical, v=param_logical),
+    }
+
+    def make_batch(rng):
+        if is_mol:
+            d = graph_data.molecule_batch(
+                n_graphs, dims["n_nodes"], dims["n_edges"], _MOL_ATOM_TYPES
+                if not smoke else cfg.n_atom_types if molecular else _MOL_ATOM_TYPES,
+                rng,
+            )
+            if not molecular:
+                # continuous features for sage/gat: one-hot-ish projections
+                d["node_feat"] = rng.normal(
+                    0, 1, (n, _MOL_FEAT)
+                ).astype(np.float32)
+            if not molecular:
+                d.pop("positions")
+            labels = d.pop("labels")
+            loss_mask = np.ones(n_graphs, np.float32)
+        else:
+            d = graph_data.citation_graph(
+                n, e, dims["d_feat"], dims["n_classes"], rng
+            )
+            labels = d.pop("labels")
+            if not molecular:
+                d.pop("positions")
+            loss_mask = (rng.random(n) < 0.5).astype(np.float32)
+            if shape.kind == "gnn_minibatch":
+                # only seed slots contribute to the loss
+                loss_mask = np.zeros(n, np.float32)
+                loss_mask[: dims["batch_nodes"]] = 1.0
+        d["node_mask"] = np.ones(n, bool)
+        d["edge_mask"] = np.ones(e, bool)
+        if needs_triplets:
+            trip = graph_data.build_triplets(d["edge_src"], d["edge_dst"], t)
+            trip.pop("truncated")
+            d["triplets"] = trip
+        return {"graph": d, "labels": labels, "loss_mask": loss_mask}
+
+    return StepBundle(
+        arch_id, shape.name, shape.kind, cfg, init_state, step,
+        state_logical, batch_logical, batch_specs, make_batch, True,
+        notes=f"n={n} e={e}" + (f" triplets={t}" if needs_triplets else ""),
+    )
+
+
+# ===========================================================================
+# RecSys family (bert4rec)
+# ===========================================================================
+
+
+def _build_recsys(spec: ArchSpec, shape: ShapeSpec, smoke: bool, mesh) -> StepBundle:
+    cfg = spec.smoke_config if smoke else spec.config
+    p = shape.params
+    batch = 2 if smoke else p["batch"]
+    seq = cfg.seq_len
+    pspec = bert4rec.param_specs(cfg)
+    opt_cfg = _opt_config(cfg.param_count())
+
+    if shape.kind == "recsys_train":
+        m, k = cfg.max_masked, cfg.n_negatives
+
+        def init_state(key):
+            params = bert4rec.init_params(cfg, key)
+            return {"params": params, "opt": opt_mod.init_adamw(opt_cfg, params)}
+
+        def step(state, batch_in):
+            def lfn(params):
+                return bert4rec.cloze_loss_sampled(
+                    cfg,
+                    params,
+                    batch_in["items"],
+                    batch_in["mask_positions"],
+                    batch_in["mask_targets"],
+                    batch_in["negatives"],
+                )
+
+            (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(
+                state["params"]
+            )
+            params, opt, om = opt_mod.apply_adamw(
+                opt_cfg, state["opt"], state["params"], grads
+            )
+            return {"params": params, "opt": opt}, {"loss": loss, **metrics, **om}
+
+        state_logical = {
+            "params": pspec,
+            "opt": opt_mod.AdamWState(step=None, m=pspec, v=pspec),
+        }
+        batch_logical = {
+            "items": ("batch", None),
+            "mask_positions": ("batch", None),
+            "mask_targets": ("batch", None),
+            "negatives": (None,),
+        }
+        batch_specs = {
+            "items": jax.ShapeDtypeStruct((batch, seq), I32),
+            "mask_positions": jax.ShapeDtypeStruct((batch, m), I32),
+            "mask_targets": jax.ShapeDtypeStruct((batch, m), I32),
+            "negatives": jax.ShapeDtypeStruct((k,), I32),
+        }
+
+        def make_batch(rng):
+            items = recsys_data.interaction_sequences(cfg.n_items, batch, seq, rng)
+            masked, positions, targets = recsys_data.cloze_mask_positions(
+                items, cfg.mask_id, m, rng
+            )
+            return {
+                "items": masked,
+                "mask_positions": positions,
+                "mask_targets": targets,
+                "negatives": rng.integers(1, cfg.n_items + 1, k).astype(np.int32),
+            }
+
+        return StepBundle(
+            spec.arch_id, shape.name, shape.kind, cfg, init_state, step,
+            state_logical, batch_logical, batch_specs, make_batch, True,
+        )
+
+    def init_state(key):
+        return bert4rec.init_params(cfg, key)
+
+    if shape.kind == "recsys_serve":
+
+        def step(params, batch_in):
+            return bert4rec.score_all_items(cfg, params, batch_in["items"])
+
+        batch_logical = {"items": ("batch", None)}
+        batch_specs = {"items": jax.ShapeDtypeStruct((batch, seq), I32)}
+        out_logical = ("batch", "vocab")
+
+        def make_batch(rng):
+            return {
+                "items": recsys_data.interaction_sequences(cfg.n_items, batch, seq, rng)
+            }
+
+    else:  # retrieval_cand
+        n_cand = 16 if smoke else p["n_candidates"]
+
+        def step(params, batch_in):
+            return bert4rec.score_candidates(
+                cfg, params, batch_in["items"], batch_in["candidates"]
+            )
+
+        batch_logical = {
+            "items": ("batch", None),
+            "candidates": ("batch", "candidates"),
+        }
+        batch_specs = {
+            "items": jax.ShapeDtypeStruct((batch, seq), I32),
+            "candidates": jax.ShapeDtypeStruct((batch, n_cand), I32),
+        }
+        out_logical = ("batch", "candidates")
+
+        def make_batch(rng):
+            return {
+                "items": recsys_data.interaction_sequences(cfg.n_items, batch, seq, rng),
+                "candidates": rng.integers(1, cfg.n_items + 1, (batch, n_cand)).astype(
+                    np.int32
+                ),
+            }
+
+    return StepBundle(
+        spec.arch_id, shape.name, shape.kind, cfg, init_state, step,
+        pspec, batch_logical, batch_specs, make_batch, False,
+        out_logical=out_logical,
+    )
+
+
+# ===========================================================================
+# entry point
+# ===========================================================================
+
+
+def build_step(
+    arch_id: str,
+    shape_name: str,
+    smoke: bool = False,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    config_override: Optional[Any] = None,
+    optimized: bool = False,
+) -> StepBundle:
+    """config_override replaces the arch's full config (used by the dry-run
+    depth-extrapolation: same arch at n_layers ∈ {1, 2}, unrolled).
+    ``optimized`` enables the §Perf hillclimb levers (vs the baseline)."""
+    spec = get_arch(arch_id)
+    if config_override is not None:
+        spec = dataclasses.replace(spec, config=config_override)
+    shape = spec.shapes[shape_name]
+    if shape.skip and not smoke:
+        raise ValueError(f"{arch_id}/{shape_name} skipped: {shape.skip}")
+    if spec.family == "lm":
+        return _build_lm(spec, shape, smoke, mesh, optimized=optimized)
+    if spec.family == "gnn":
+        return _build_gnn(spec, shape, smoke, mesh)
+    if spec.family == "recsys":
+        return _build_recsys(spec, shape, smoke, mesh)
+    raise ValueError(spec.family)

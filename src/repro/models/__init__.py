@@ -1,0 +1,4 @@
+from repro.models import gnn, layers, recsys, transformer
+from repro.models.transformer import TransformerConfig
+
+__all__ = ["gnn", "layers", "recsys", "transformer", "TransformerConfig"]

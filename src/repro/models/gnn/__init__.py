@@ -1,0 +1,4 @@
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn import common, dimenet, gat, graphsage, sampler, schnet
+
+__all__ = ["GraphBatch", "common", "dimenet", "gat", "graphsage", "sampler", "schnet"]

@@ -1,0 +1,154 @@
+"""DimeNet (Klicpera et al., arXiv:2003.03123) — directional message passing.
+
+Kernel regime: TRIPLET gather (k→j→i index lists), not expressible as SpMM.
+Messages live on directed edges; each interaction block mixes incoming
+messages m_kj into m_ji through a (radial × angular) basis and a bilinear
+layer (n_bilinear=8).
+
+Faithful structure with one documented simplification (DESIGN.md): the 2-D
+spherical basis uses Bessel-sine radial functions × Legendre polynomials
+P_l(cos α) instead of spherical Bessel zeros j_l(z_ln·d/c)·Y_l(α) — same
+tensor shapes, same triplet dataflow, simpler special functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    dense_init,
+    edge_distances,
+    graph_readout_sum,
+    mlp_apply,
+    mlp_params,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_atom_types: int = 100
+    feature_mode: str = "embed_types"
+    d_in: int = 0
+    out_dim: int = 1
+    task: str = "graph_reg"
+
+
+def bessel_rbf(d: jax.Array, n_radial: int, cutoff: float) -> jax.Array:
+    """DimeNet radial basis: sqrt(2/c) * sin(n π d / c) / d."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d_safe = jnp.maximum(d, 1e-6)[:, None]
+    return np.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * d_safe / cutoff) / d_safe
+
+
+def legendre_cos(cos_a: jax.Array, n_spherical: int) -> jax.Array:
+    """P_l(cos α) for l = 0..n_spherical-1 via the recurrence."""
+    outs = [jnp.ones_like(cos_a), cos_a]
+    for l in range(2, n_spherical):
+        p = ((2 * l - 1) * cos_a * outs[-1] - (l - 1) * outs[-2]) / l
+        outs.append(p)
+    return jnp.stack(outs[:n_spherical], axis=-1)  # (T, L)
+
+
+def spherical_basis(d_in: jax.Array, cos_a: jax.Array, cfg: DimeNetConfig):
+    """(T,) dist of incoming edge × (T,) angle -> (T, n_spherical*n_radial)."""
+    rad = bessel_rbf(d_in, cfg.n_radial, cfg.cutoff)      # (T, R)
+    ang = legendre_cos(cos_a, cfg.n_spherical)            # (T, L)
+    return (rad[:, None, :] * ang[:, :, None]).reshape(d_in.shape[0], -1)
+
+
+def init_params(cfg: DimeNetConfig, key: jax.Array) -> Dict:
+    keys = jax.random.split(key, cfg.n_blocks + 4)
+    f = cfg.d_hidden
+    s = cfg.n_spherical * cfg.n_radial
+    params: Dict = {}
+    if cfg.feature_mode == "embed_types":
+        params["embed"] = dense_init(keys[0], (cfg.n_atom_types, f), f)
+    else:
+        params["proj"] = dense_init(keys[0], (cfg.d_in, f), cfg.d_in)
+    params["rbf_proj"] = dense_init(keys[1], (cfg.n_radial, f), cfg.n_radial)
+    params.update(mlp_params(keys[2], [3 * f, f, f], "emb_"))
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = keys[i + 3]
+        ks = jax.random.split(k, 6)
+        blocks.append(
+            {
+                "w_msg": dense_init(ks[0], (f, f), f),
+                "w_down": dense_init(ks[1], (f, cfg.n_bilinear), f),
+                "w_bil": dense_init(ks[2], (s, cfg.n_bilinear, f), s * cfg.n_bilinear),
+                "w_rbf_gate": dense_init(ks[3], (cfg.n_radial, f), cfg.n_radial),
+                **mlp_params(ks[4], [f, f, f], "upd_"),
+                # per-block output head: edge -> node contribution
+                "w_out_rbf": dense_init(ks[5], (cfg.n_radial, f), cfg.n_radial),
+                **mlp_params(jax.random.fold_in(ks[5], 1), [f, f, cfg.out_dim], "out_"),
+            }
+        )
+    params["blocks"] = blocks
+    return params
+
+
+def forward(cfg: DimeNetConfig, params: Dict, g: GraphBatch, n_graphs: int = 1):
+    """g must carry triplet index arrays in ``g.triplets`` — see
+    :func:`repro.data.graphs.build_triplets`.  Returns (n_graphs, out_dim)
+    for graph_reg or (N, out_dim) for node_class."""
+    trip = g.triplets
+    t_in, t_out, t_mask = trip["in"], trip["out"], trip["mask"]
+    if cfg.feature_mode == "embed_types":
+        h = params["embed"][g.node_feat.astype(jnp.int32)]
+    else:
+        h = g.node_feat.astype(jnp.float32) @ params["proj"]
+    n, e = g.n_nodes, g.n_edges
+    d, diff = edge_distances(g.positions, g.edge_src, g.edge_dst, g.edge_mask)
+    rbf = bessel_rbf(d, cfg.n_radial, cfg.cutoff)         # (E, R)
+    # triplet angles at vertex j for (k->j)=t_in, (j->i)=t_out:
+    # cos α = (x_k - x_j)·(x_i - x_j) / (|..| |..|)
+    v_in = -diff[t_in]    # x_k - x_j  (diff is x_dst - x_src)
+    v_out = diff[t_out]   # x_i - x_j
+    num = jnp.sum(v_in * v_out, axis=-1)
+    den = jnp.maximum(d[t_in] * d[t_out], 1e-6)
+    cos_a = jnp.clip(num / den, -1.0, 1.0)
+    sbf = spherical_basis(d[t_in], cos_a, cfg) * t_mask[:, None]  # (T, S)
+
+    # embedding block: m_ji = MLP([h_j, h_i, W rbf])
+    m = mlp_apply(
+        params,
+        jnp.concatenate([h[g.edge_src], h[g.edge_dst], rbf @ params["rbf_proj"]], -1),
+        2,
+        "emb_",
+    )  # (E, F)
+    m = m * g.edge_mask[:, None]
+
+    node_out = jnp.zeros((n, cfg.out_dim), jnp.float32)
+    for bp in params["blocks"]:
+        # directional interaction: gather m_kj, mix with sbf via bilinear form
+        a = (m @ bp["w_down"])[t_in]                       # (T, B)
+        contrib = jnp.einsum("ts,tb,sbf->tf", sbf, a, bp["w_bil"])  # (T, F)
+        agg = jax.ops.segment_sum(
+            contrib * t_mask[:, None], t_out, num_segments=e
+        )  # (E, F)
+        gate = rbf @ bp["w_rbf_gate"]                      # (E, F)
+        m = m + mlp_apply(bp, jax.nn.silu(m @ bp["w_msg"] * gate + agg), 2, "upd_")
+        m = m * g.edge_mask[:, None]
+        # output block: edges -> destination nodes
+        edge_val = m * (rbf @ bp["w_out_rbf"])
+        node_feat = jax.ops.segment_sum(
+            edge_val * g.edge_mask[:, None], g.edge_dst, num_segments=n
+        )
+        node_out = node_out + mlp_apply(bp, node_feat, 2, "out_")
+
+    if cfg.task == "graph_reg":
+        gid = g.graph_ids if g.graph_ids is not None else jnp.zeros((n,), jnp.int32)
+        return graph_readout_sum(node_out, gid, n_graphs, g.node_mask)
+    return node_out

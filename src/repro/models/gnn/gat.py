@@ -1,0 +1,70 @@
+"""GAT (Velickovic et al., arXiv:1710.10903) — attention aggregator via
+SDDMM-style edge scores + segment softmax.
+
+Assigned config gat-cora: 2 layers, d_hidden=8, 8 heads (layer-1 concat ->
+64; final layer heads averaged into out_dim logits, as in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphBatch, dense_init, segment_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8   # per head
+    n_heads: int = 8
+    out_dim: int = 7
+    negative_slope: float = 0.2
+
+
+def init_params(cfg: GATConfig, key: jax.Array) -> Dict:
+    layers = []
+    d_prev = cfg.d_in
+    keys = jax.random.split(key, cfg.n_layers)
+    for i in range(cfg.n_layers):
+        final = i == cfg.n_layers - 1
+        d_out = cfg.out_dim if final else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        layers.append(
+            {
+                "w": dense_init(k1, (d_prev, cfg.n_heads * d_out), d_prev),
+                "a_src": dense_init(k2, (cfg.n_heads, d_out), d_out),
+                "a_dst": dense_init(k3, (cfg.n_heads, d_out), d_out),
+            }
+        )
+        d_prev = d_out if final else cfg.n_heads * d_out
+    return {"layers": layers}
+
+
+def forward(cfg: GATConfig, params: Dict, g: GraphBatch) -> jax.Array:
+    h = g.node_feat.astype(jnp.float32)
+    n = g.n_nodes
+    for i, lp in enumerate(params["layers"]):
+        final = i == cfg.n_layers - 1
+        d_out = cfg.out_dim if final else cfg.d_hidden
+        wh = (h @ lp["w"]).reshape(n, cfg.n_heads, d_out)
+        # SDDMM-style scores on edges
+        s_src = jnp.einsum("nhd,hd->nh", wh, lp["a_src"])  # (N, H)
+        s_dst = jnp.einsum("nhd,hd->nh", wh, lp["a_dst"])
+        scores = jax.nn.leaky_relu(
+            s_src[g.edge_src] + s_dst[g.edge_dst], cfg.negative_slope
+        )  # (E, H)
+        alpha = segment_softmax(scores, g.edge_dst, n, g.edge_mask)  # (E, H)
+        msgs = wh[g.edge_src] * alpha[..., None]  # (E, H, D)
+        agg = jax.ops.segment_sum(
+            msgs * g.edge_mask[:, None, None], g.edge_dst, num_segments=n
+        )
+        if final:
+            h = jnp.mean(agg, axis=1)  # average heads -> (N, out_dim)
+        else:
+            h = jax.nn.elu(agg.reshape(n, cfg.n_heads * d_out))
+    return h

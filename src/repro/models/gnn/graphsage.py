@@ -1,0 +1,60 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216) with mean aggregation.
+
+Assigned config graphsage-reddit: 2 layers, d_hidden=128, mean aggregator,
+sample sizes 25-10 (the minibatch_lg shape overrides fanouts to 15-10 per the
+assignment).  Works full-batch or on sampled padded subgraphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    dense_init,
+    scatter_mean,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    out_dim: int = 41
+    aggregator: str = "mean"
+
+
+def init_params(cfg: SAGEConfig, key: jax.Array) -> Dict:
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "w_self": dense_init(keys[i], (d_prev, cfg.d_hidden), d_prev),
+                "w_neigh": dense_init(
+                    jax.random.fold_in(keys[i], 1), (d_prev, cfg.d_hidden), d_prev
+                ),
+                "b": jnp.zeros((cfg.d_hidden,), jnp.float32),
+            }
+        )
+        d_prev = cfg.d_hidden
+    head = dense_init(keys[-1], (cfg.d_hidden, cfg.out_dim), cfg.d_hidden)
+    return {"layers": layers, "head": head}
+
+
+def forward(cfg: SAGEConfig, params: Dict, g: GraphBatch) -> jax.Array:
+    """Returns per-node logits (N, out_dim)."""
+    h = g.node_feat.astype(jnp.float32)
+    n = g.n_nodes
+    for lp in params["layers"]:
+        neigh = scatter_mean(h[g.edge_src], g.edge_dst, n, g.edge_mask)
+        h = jax.nn.relu(h @ lp["w_self"] + neigh @ lp["w_neigh"] + lp["b"])
+        # L2 normalize as in the paper (Section 3.1, line 7)
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h @ params["head"]

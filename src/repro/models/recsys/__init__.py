@@ -1,0 +1,4 @@
+from repro.models.recsys import bert4rec
+from repro.models.recsys.bert4rec import Bert4RecConfig, embedding_bag
+
+__all__ = ["bert4rec", "Bert4RecConfig", "embedding_bag"]

@@ -1,0 +1,223 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690) — bidirectional self-attention
+sequential recommender with Cloze (masked-item) training.
+
+Assigned config: embed_dim=64, 2 blocks, 2 heads, seq_len=200, bidirectional
+interaction.  The item-embedding table is the huge-sparse-table axis of the
+recsys regime (1M items here); lookups are gathers, and the multi-hot bag
+path is EmbeddingBag built from take + segment_sum (JAX has no native one).
+
+Encoder-only: no autoregressive decode — the four recsys shapes are
+train_batch (Cloze loss), serve_p99 / serve_bulk (score all items at masked
+positions), retrieval_cand (one user against 1M candidates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000     # vocab incl. [PAD]=0; [MASK]=n_items+1
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff_mult: int = 4
+    n_negatives: int = 2048      # sampled-softmax negatives (train_batch)
+    compute_dtype: object = jnp.bfloat16
+
+    @property
+    def vocab(self) -> int:
+        # PAD + MASK, padded to a 512 multiple so the vocab axis shards
+        # evenly on the 16/32-way mesh axes.
+        return ((self.n_items + 2 + 511) // 512) * 512
+
+    @property
+    def max_masked(self) -> int:
+        return max(1, self.seq_len // 4)
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items + 1
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        per = 4 * d * d + 2 * d * d * self.d_ff_mult
+        return self.vocab * d + self.seq_len * d + self.n_blocks * per
+
+
+def init_params(cfg: Bert4RecConfig, key: jax.Array) -> Dict:
+    d = cfg.embed_dim
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_blocks))
+
+    def init(k, shape, fan):
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan)
+
+    blocks = {
+        "wq": jnp.stack([init(next(keys), (d, d), d) for _ in range(cfg.n_blocks)]),
+        "wk": jnp.stack([init(next(keys), (d, d), d) for _ in range(cfg.n_blocks)]),
+        "wv": jnp.stack([init(next(keys), (d, d), d) for _ in range(cfg.n_blocks)]),
+        "wo": jnp.stack([init(next(keys), (d, d), d) for _ in range(cfg.n_blocks)]),
+        "w1": jnp.stack(
+            [init(next(keys), (d, d * cfg.d_ff_mult), d) for _ in range(cfg.n_blocks)]
+        ),
+        "w2": jnp.stack(
+            [init(next(keys), (d * cfg.d_ff_mult, d), d * cfg.d_ff_mult) for _ in range(cfg.n_blocks)]
+        ),
+        "ln1_w": jnp.ones((cfg.n_blocks, d), jnp.float32),
+        "ln1_b": jnp.zeros((cfg.n_blocks, d), jnp.float32),
+        "ln2_w": jnp.ones((cfg.n_blocks, d), jnp.float32),
+        "ln2_b": jnp.zeros((cfg.n_blocks, d), jnp.float32),
+    }
+    return {
+        "item_embed": init(next(keys), (cfg.vocab, d), d),
+        "pos_embed": init(next(keys), (cfg.seq_len, d), d),
+        "out_bias": jnp.zeros((cfg.vocab,), jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def param_specs(cfg: Bert4RecConfig) -> Dict:
+    return {
+        "item_embed": ("vocab", None),
+        "pos_embed": (None, None),
+        "out_bias": ("vocab",),
+        "blocks": {
+            "wq": (None, "embed", "heads"),
+            "wk": (None, "embed", "heads"),
+            "wv": (None, "embed", "heads"),
+            "wo": (None, "heads", "embed"),
+            "w1": (None, "embed", "ffn"),
+            "w2": (None, "ffn", "embed"),
+            "ln1_w": (None, None),
+            "ln1_b": (None, None),
+            "ln2_w": (None, None),
+            "ln2_b": (None, None),
+        },
+    }
+
+
+def _layer_norm(x, w, b, eps=1e-6):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def encode(cfg: Bert4RecConfig, params: Dict, items: jax.Array) -> jax.Array:
+    """items (B, S) int32 -> hidden states (B, S, D).  PAD=0 is masked out of
+    attention (bidirectional otherwise)."""
+    b, s = items.shape
+    dt = cfg.compute_dtype
+    x = (params["item_embed"][items] + params["pos_embed"][None, :s]).astype(dt)
+    pad_mask = (items != 0)  # (B, S)
+    attn_mask = pad_mask[:, None, None, :]  # (B, 1, 1, S)
+    h = cfg.n_heads
+    dh = cfg.embed_dim // h
+
+    def body(x, bp):
+        bp = jax.tree.map(lambda a: a.astype(dt), bp)
+        y = _layer_norm(x.astype(jnp.float32), bp["ln1_w"].astype(jnp.float32), bp["ln1_b"].astype(jnp.float32)).astype(dt)
+        q = (y @ bp["wq"]).reshape(b, s, h, dh)
+        k = (y @ bp["wk"]).reshape(b, s, h, dh)
+        v = (y @ bp["wv"]).reshape(b, s, h, dh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) / np.sqrt(dh)
+        logits = jnp.where(attn_mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, -1).astype(dt)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = x + attn @ bp["wo"]
+        y2 = _layer_norm(x.astype(jnp.float32), bp["ln2_w"].astype(jnp.float32), bp["ln2_b"].astype(jnp.float32)).astype(dt)
+        x = x + jax.nn.gelu(y2 @ bp["w1"]) @ bp["w2"]
+        return x, None
+
+    # python loop (n_blocks=2): keeps HLO cost analysis exact (while bodies
+    # are counted once by XLA cost analysis — DESIGN.md Section 8)
+    for i in range(cfg.n_blocks):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        x, _ = body(x, bp)
+    return x
+
+
+def cloze_loss(cfg: Bert4RecConfig, params: Dict, items: jax.Array, targets: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Full-softmax Cloze loss (small vocabs / smoke configs).  items has
+    [MASK] tokens; targets holds the true item at masked positions, else 0."""
+    hidden = encode(cfg, params, items).astype(jnp.float32)
+    logits = hidden @ params["item_embed"].T + params["out_bias"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"xent": loss, "n_masked": jnp.sum(mask)}
+
+
+def cloze_loss_sampled(
+    cfg: Bert4RecConfig,
+    params: Dict,
+    items: jax.Array,          # (B, S) with [MASK]
+    mask_positions: jax.Array,  # (B, M) indices of masked slots
+    mask_targets: jax.Array,    # (B, M) true items at those slots; 0 = unused
+    negatives: jax.Array,       # (K,) shared negative samples
+) -> Tuple[jax.Array, Dict]:
+    """Sampled-softmax Cloze for production vocabs (1M items): full softmax
+    at 65 536×200 positions is ~50 TB of logits; instead gather the ≤M masked
+    positions and score gold vs K shared uniform negatives (no logQ
+    correction — uniform proposal, documented)."""
+    hidden = encode(cfg, params, items).astype(jnp.float32)       # (B, S, D)
+    h_m = jnp.take_along_axis(
+        hidden, mask_positions[..., None], axis=1
+    )                                                             # (B, M, D)
+    gold_emb = params["item_embed"][mask_targets]                 # (B, M, D)
+    gold = jnp.sum(h_m * gold_emb, -1) + params["out_bias"][mask_targets]
+    neg_emb = params["item_embed"][negatives]                     # (K, D)
+    neg = jnp.einsum("bmd,kd->bmk", h_m, neg_emb) + params["out_bias"][negatives]
+    logits = jnp.concatenate([gold[..., None], neg], axis=-1)     # (B, M, K+1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    mask = (mask_targets != 0).astype(jnp.float32)
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"xent": loss, "n_masked": jnp.sum(mask)}
+
+
+def score_all_items(cfg: Bert4RecConfig, params: Dict, items: jax.Array) -> jax.Array:
+    """Next-item serving: hidden state at the LAST position scores every item
+    — (B, vocab) logits.  serve_p99 / serve_bulk shapes."""
+    hidden = encode(cfg, params, items).astype(jnp.float32)
+    last = hidden[:, -1]
+    return last @ params["item_embed"].T + params["out_bias"]
+
+
+def score_candidates(
+    cfg: Bert4RecConfig, params: Dict, items: jax.Array, candidates: jax.Array
+) -> jax.Array:
+    """retrieval_cand: score (B,) users' last positions against an explicit
+    (B, C) candidate list — gather + batched dot, NOT a loop."""
+    hidden = encode(cfg, params, items).astype(jnp.float32)
+    last = hidden[:, -1]  # (B, D)
+    cand_emb = params["item_embed"][candidates]  # (B, C, D)
+    return jnp.einsum("bd,bcd->bc", last, cand_emb) + params["out_bias"][candidates]
+
+
+def embedding_bag(
+    table: jax.Array, bags: jax.Array, bag_mask: jax.Array, mode: str = "mean"
+) -> jax.Array:
+    """EmbeddingBag built from take + masked reduce (no native op in JAX).
+
+    bags: (B, L) int32 item ids, bag_mask: (B, L) bool. Returns (B, D).
+    Used for multi-hot user-feature bags in the retrieval tower.
+    """
+    emb = table[bags]  # (B, L, D)
+    m = bag_mask[..., None].astype(emb.dtype)
+    s = jnp.sum(emb * m, axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    if mode == "max":
+        neg = jnp.where(bag_mask[..., None], emb, -jnp.inf)
+        out = jnp.max(neg, axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)

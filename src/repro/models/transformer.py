@@ -1,0 +1,438 @@
+"""Decoder-only transformer LM covering the five assigned LM architectures.
+
+One parametric implementation: GQA (+qk-norm for Qwen3), RoPE, sliding-window
+attention (Mixtral), SwiGLU dense FFN, capacity-based MoE (Mixtral 8e /
+Arctic 128e top-2) with optional dense-residual branch (Arctic), parametric
+RMSNorm or OLMo's non-parametric LayerNorm.  Layer params are stacked on a
+leading L axis and the stack is executed with ``lax.scan`` (HLO size — and
+compile time on the dry-run host — independent of depth).
+
+Three entry points per the assigned shapes:
+  ``loss_fn``      train_4k            (causal LM loss)
+  ``prefill``      prefill_32k         (logits + KV cache)
+  ``decode_step``  decode_32k/long_500k (one token against the cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    MoEArgs,
+    apply_norm,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    gqa_attention,
+    moe_block,
+    rms_norm,
+    swiglu,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm_nonparam"
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    moe: Optional[MoEArgs] = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # perf/memory knobs (production configs set these; smoke configs don't)
+    attn_q_chunk: Optional[int] = None   # query-chunked attention block size
+    remat: bool = False                  # rematerialize each layer body
+    act_pspec: Optional[Any] = None      # PartitionSpec for the layer carry
+    #                                      (activation sequence sharding / SP)
+    scan_layers: bool = True             # False: python-loop (unrolled HLO —
+    #                                      XLA cost analysis counts while
+    #                                      bodies ONCE, so the roofline path
+    #                                      compiles unrolled depths; see
+    #                                      launch/dryrun.py extrapolation)
+    attn_window_slicing: bool = False    # §Perf: SWA chunks slice their KV
+    #                                      window instead of masking dense
+    attn_halo_mesh: Optional[Any] = None  # §Perf iter-4: halo-exchange SWA
+    #                                      (shard_map ppermute, no KV gather)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        dense = 3 * d * self.d_ff
+        per_layer = attn + dense
+        if self.moe is not None:
+            per_layer += self.moe.n_experts * 3 * d * self.d_ff + d * self.moe.n_experts
+            if not self.moe.dense_residual:
+                per_layer -= dense  # MoE replaces the dense FFN
+        emb = self.vocab * d
+        head = 0 if self.tie_embeddings else d * self.vocab
+        return self.n_layers * per_layer + emb + head
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only) — the N in
+        MODEL_FLOPS = 6·N_active·D."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        dense = 3 * d * self.d_ff
+        inactive = (self.moe.n_experts - self.moe.top_k) * dense
+        return self.param_count() - self.n_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv, f, L = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.n_layers
+    keys = iter(jax.random.split(key, 32))
+    pd = cfg.param_dtype
+
+    def dense_init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)).astype(pd)
+
+    layers: Dict[str, jax.Array] = {
+        "wq": dense_init(next(keys), (L, d, hq * dh), d),
+        "wk": dense_init(next(keys), (L, d, hkv * dh), d),
+        "wv": dense_init(next(keys), (L, d, hkv * dh), d),
+        "wo": dense_init(next(keys), (L, hq * dh, d), hq * dh),
+    }
+    if cfg.norm == "rmsnorm":
+        layers["attn_norm_w"] = jnp.ones((L, d), pd)
+        layers["mlp_norm_w"] = jnp.ones((L, d), pd)
+    if cfg.qk_norm:
+        layers["q_norm_w"] = jnp.ones((L, dh), pd)
+        layers["k_norm_w"] = jnp.ones((L, dh), pd)
+    use_dense = cfg.moe is None or cfg.moe.dense_residual
+    if use_dense:
+        layers["w_gate"] = dense_init(next(keys), (L, d, f), d)
+        layers["w_up"] = dense_init(next(keys), (L, d, f), d)
+        layers["w_down"] = dense_init(next(keys), (L, f, d), f)
+    if cfg.moe is not None:
+        e = cfg.moe.n_experts
+        layers["router"] = dense_init(next(keys), (L, d, e), d)
+        layers["moe_gate"] = dense_init(next(keys), (L, e, d, f), d)
+        layers["moe_up"] = dense_init(next(keys), (L, e, d, f), d)
+        layers["moe_down"] = dense_init(next(keys), (L, e, f, d), f)
+
+    params = {
+        "embed": dense_init(next(keys), (cfg.vocab, d), d),
+        "layers": layers,
+    }
+    if cfg.norm == "rmsnorm":
+        params["final_norm_w"] = jnp.ones((d,), pd)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(next(keys), (d, cfg.vocab), d)
+    return params
+
+
+def param_specs(cfg: TransformerConfig) -> Dict:
+    """Logical-axis names per param dim, mirrored on the param pytree.
+    Resolved to mesh PartitionSpecs by ``repro.distributed.sharding``."""
+    layers: Dict[str, tuple] = {
+        "wq": (None, "embed", "heads"),
+        "wk": (None, "embed", "kv_heads"),
+        "wv": (None, "embed", "kv_heads"),
+        "wo": (None, "heads", "embed"),
+    }
+    if cfg.norm == "rmsnorm":
+        layers["attn_norm_w"] = (None, None)
+        layers["mlp_norm_w"] = (None, None)
+    if cfg.qk_norm:
+        layers["q_norm_w"] = (None, None)
+        layers["k_norm_w"] = (None, None)
+    use_dense = cfg.moe is None or cfg.moe.dense_residual
+    if use_dense:
+        layers["w_gate"] = (None, "embed", "ffn")
+        layers["w_up"] = (None, "embed", "ffn")
+        layers["w_down"] = (None, "ffn", "embed")
+    if cfg.moe is not None:
+        layers["router"] = (None, "embed", None)
+        if cfg.moe.partition == "expert":
+            espec = (None, "experts", "embed", None)
+            espec_dn = (None, "experts", None, "embed")
+        else:  # "ffn": TP inside each expert (n_experts < model axis)
+            espec = (None, None, "embed", "ffn")
+            espec_dn = (None, None, "ffn", "embed")
+        layers["moe_gate"] = espec
+        layers["moe_up"] = espec
+        layers["moe_down"] = espec_dn
+    specs = {"embed": ("vocab", "embed"), "layers": layers}
+    if cfg.norm == "rmsnorm":
+        specs["final_norm_w"] = (None,)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ("embed", "vocab")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: TransformerConfig, lp, h, positions):
+    b, s, _ = h.shape
+    dh = cfg.head_dim
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm_w"])
+        k = rms_norm(k, lp["k_norm_w"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(cfg: TransformerConfig, lp, h2) -> Tuple[jax.Array, jax.Array]:
+    """Dense / MoE / MoE+dense-residual FFN on (B, S, D)."""
+    b, s, d = h2.shape
+    aux = jnp.zeros((), jnp.float32)
+    y = jnp.zeros_like(h2)
+    if cfg.moe is not None:
+        if cfg.moe.shard_dispatch and cfg.moe.mesh is not None:
+            from repro.models.layers import moe_ffn_sharded
+
+            moe_out, aux = moe_ffn_sharded(
+                h2, lp["router"], lp["moe_gate"], lp["moe_up"], lp["moe_down"],
+                cfg.moe,
+            )
+            y = y + moe_out
+        else:
+            flat = h2.reshape(b * s, d)
+            moe_out, aux = moe_block(
+                flat, lp["router"], lp["moe_gate"], lp["moe_up"], lp["moe_down"],
+                cfg.moe,
+            )
+            y = y + moe_out.reshape(b, s, d)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        y = y + swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return y, aux
+
+
+def _attend(cfg: TransformerConfig, q, k, v):
+    if cfg.attn_halo_mesh is not None and cfg.sliding_window is not None:
+        from repro.models.layers import swa_attention_halo
+
+        mesh = cfg.attn_halo_mesh
+        tp = mesh.shape.get("model", 1)
+        s = q.shape[1]
+        qc = cfg.attn_q_chunk or 512
+        usable = (
+            tp > 1
+            and s % tp == 0
+            and (s // tp) % qc == 0
+            and cfg.sliding_window < s * (tp - 1) // tp
+        )
+        if usable:
+            return swa_attention_halo(
+                q, k, v, sliding_window=cfg.sliding_window, mesh=mesh, q_chunk=qc
+            )
+    if cfg.attn_q_chunk is not None:
+        return chunked_attention(
+            q, k, v, causal=True, sliding_window=cfg.sliding_window,
+            q_chunk=cfg.attn_q_chunk, window_slicing=cfg.attn_window_slicing,
+        )
+    return gqa_attention(q, k, v, causal=True, sliding_window=cfg.sliding_window)
+
+
+def _constrain(cfg: TransformerConfig, x):
+    if cfg.act_pspec is not None:
+        return jax.lax.with_sharding_constraint(x, cfg.act_pspec)
+    return x
+
+
+def _layer(cfg: TransformerConfig, x, lp, positions):
+    h = apply_norm(cfg.norm, x, lp.get("attn_norm_w"))
+    q, k, v = _project_qkv(cfg, lp, h, positions)
+    attn = _attend(cfg, q, k, v)
+    b, s, _ = x.shape
+    x = x + attn.reshape(b, s, -1) @ lp["wo"]
+    h2 = apply_norm(cfg.norm, x, lp.get("mlp_norm_w"))
+    y, aux = _ffn(cfg, lp, h2)
+    return _constrain(cfg, x + y), aux
+
+
+# ---------------------------------------------------------------------------
+# Training forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: TransformerConfig, params: Dict, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(cfg.compute_dtype), lp)
+        x, aux = _layer(cfg, x, lp, positions)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, auxes = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxes)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body(x, lp)
+            aux = aux + a
+    x = apply_norm(cfg.norm, x, params.get("final_norm_w"))
+    head = params.get("lm_head", params["embed"].T)
+    logits = x @ head.astype(cfg.compute_dtype)
+    # (B, S, V) is the largest tensor in the program (mixtral train_4k: 137 GB
+    # fp32) — without a constraint the seq-vs-vocab "model"-axis conflict made
+    # GSPMD replicate it (measured; DESIGN.md Section 8).
+    logits = _constrain(cfg, logits)
+    return logits, aux
+
+
+def loss_fn(cfg: TransformerConfig, params: Dict, tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Causal LM loss over tokens (B, S+1): predict tokens[:,1:]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(cfg, params, inputs)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    xent = jnp.mean(logz - gold)
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_capacity(cfg: TransformerConfig, max_seq: int) -> int:
+    """Ring capacity: SWA archs bound the cache by the window (the
+    sub-quadratic property that makes long_500k runnable for Mixtral)."""
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> Dict:
+    cap = cache_capacity(cfg, max_seq)
+    shape = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+        "len": jnp.zeros((), jnp.int32),  # tokens seen so far (absolute)
+    }
+
+
+def prefill(
+    cfg: TransformerConfig,
+    params: Dict,
+    tokens: jax.Array,
+    max_seq: Optional[int] = None,
+) -> Tuple[jax.Array, Dict]:
+    """tokens (B, S) -> (last-position logits (B, V), cache).
+
+    ``max_seq`` sizes the cache for subsequent decoding (>= S); SWA archs cap
+    it at the window (ring cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cap = min(cache_capacity(cfg, max_seq or s), s)
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(cfg.compute_dtype), lp)
+        h = apply_norm(cfg.norm, x, lp.get("attn_norm_w"))
+        q, k, v = _project_qkv(cfg, lp, h, positions)
+        attn = _attend(cfg, q, k, v)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        h2 = apply_norm(cfg.norm, x, lp.get("mlp_norm_w"))
+        y, _ = _ffn(cfg, lp, h2)
+        # cache the last `cap` rotated keys/values
+        return _constrain(cfg, x + y), (k[:, s - cap :], v[:, s - cap :])
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ki, vi) = body(x, lp)
+            ks_l.append(ki)
+            vs_l.append(vi)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    x = apply_norm(cfg.norm, x, params.get("final_norm_w"))
+    head = params.get("lm_head", params["embed"].T)
+    logits = x[:, -1] @ head.astype(cfg.compute_dtype)
+    target_cap = cache_capacity(cfg, max_seq or s)
+    if cap < target_cap:
+        # Full-attention decode headroom: positions occupy slots [0, s).
+        pad = [(0, 0), (0, 0), (0, target_cap - cap), (0, 0), (0, 0)]
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    elif cfg.sliding_window is not None and s > cap:
+        # Ring layout: absolute position p lives in slot p % cap.
+        shift = (s - cap) % cap
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(
+    cfg: TransformerConfig, params: Dict, token: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One decode step.  token (B,) int32; cache from init_cache/prefill.
+    Returns (logits (B, V), updated cache)."""
+    b = token.shape[0]
+    cap = cache["k"].shape[2]
+    pos = cache["len"]  # scalar absolute position
+    write_idx = pos % cap
+    valid = jnp.minimum(pos + 1, cap)
+    x = params["embed"][token][:, None, :].astype(cfg.compute_dtype)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        lp = jax.tree.map(lambda a: a.astype(cfg.compute_dtype), lp)
+        h = apply_norm(cfg.norm, x, lp.get("attn_norm_w"))
+        q, k, v = _project_qkv(cfg, lp, h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, write_idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, write_idx, axis=1)
+        attn = decode_attention(q, ck, cv, valid)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"]
+        h2 = apply_norm(cfg.norm, x, lp.get("mlp_norm_w"))
+        y, _ = _ffn(cfg, lp, h2)
+        return x + y, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (ki, vi) = body(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_l.append(ki)
+            vs_l.append(vi)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    x = apply_norm(cfg.norm, x, params.get("final_norm_w"))
+    head = params.get("lm_head", params["embed"].T)
+    logits = x[:, 0] @ head.astype(cfg.compute_dtype)
+    new_cache = {"k": ks, "v": vs, "len": pos + 1}
+    return logits.astype(jnp.float32), new_cache

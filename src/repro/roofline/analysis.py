@@ -1,0 +1,305 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+  compute    = HLO_FLOPs_per_chip / 197e12           (bf16 MXU peak)
+  memory     = HLO_bytes_per_chip / 819e9            (HBM bandwidth)
+  collective = collective_bytes_per_chip / 50e9      (ICI per-link)
+
+``cost_analysis()`` of an SPMD-partitioned executable reports the PER-DEVICE
+module (verified in tests/test_dryrun_small.py), so flops/bytes are already
+per-chip.  collective bytes are parsed from ``compiled.as_text()`` (the
+post-partitioning HLO — ``lowered.as_text()`` predates SPMD and has no
+collectives), summing result-shard bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (all-reduce counts 2×:
+reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+HW = dict(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,   # per chip
+    hbm_bw=819e9,             # bytes/s per chip
+    ici_bw=50e9,              # bytes/s per link
+    hbm_bytes=16e9,           # capacity per chip
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,4096,512]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown: conservative small group
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-op-type {count, bytes} of ICI wire traffic PER CHIP
+    from post-SPMD HLO text.
+
+    Bandwidth-optimal (ring) cost model with g = replica-group size and
+    S = per-device result bytes:
+      all-gather         S·(g-1)/g     (receives every other shard)
+      reduce-scatter     S·(g-1)/g
+      all-reduce         2·S·(g-1)/g   (reduce-scatter + all-gather phases)
+      all-to-all         S·(g-1)/g
+      collective-permute S             (one hop)
+
+    GSPMD-on-CPU artifact (DESIGN.md Section 8): reduce-scatters are emitted
+    as all-reduce + dynamic-slice(partition-id).  When every consumer of an
+    all-reduce is a dynamic-slice, it is re-classified as reduce-scatter with
+    the sliced (1/g) payload — the op a TPU build actually emits.
+    *-start ops are counted once (their *-done twin carries no new payload).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES
+    }
+    lines = hlo_text.splitlines()
+    # map: op name -> set of consumer opcodes
+    consumers: Dict[str, set] = {}
+    name_re = re.compile(r"%([\w.\-]+)")
+    for line in lines:
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        opcode_m = re.search(r"\s([a-z][a-z0-9\-]*)\(", rhs)
+        opcode = opcode_m.group(1) if opcode_m else ""
+        paren = rhs.find("(")
+        if paren >= 0:
+            for nm in name_re.findall(rhs[paren:]):
+                consumers.setdefault(nm, set()).add(opcode)
+
+    for line in lines:
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(?:\([^)]*\)|[\w\[\],{}:#\s]*?)\s*([a-z\-]+)(?:-start)?\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        if "-done(" in rhs:
+            continue
+        head = rhs.split(op)[0]
+        nbytes = _shape_bytes(head)
+        g = _group_size(line)
+        ring = (g - 1) / max(g, 1)
+        name_m = name_re.search(lhs)
+        name = name_m.group(1) if name_m else ""
+        cons = consumers.get(name, set())
+        if op == "all-reduce" and cons and cons <= {"dynamic-slice"}:
+            # TPU would emit a reduce-scatter of the sliced payload
+            out["reduce-scatter"]["count"] += 1
+            out["reduce-scatter"]["bytes"] += (nbytes / g) * ring
+            continue
+        if op == "all-reduce":
+            nbytes *= 2.0
+        if op != "collective-permute":
+            nbytes *= ring
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float
+    n_chips: int
+    useful_ratio: Optional[float]  # MODEL_FLOPS / (HLO_FLOPs × chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline lower bound on step time (no overlap assumption: max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step-time bound spent on useful model math — the
+        score: MODEL_FLOPS / (chips × peak × step_time_lb)."""
+        if self.step_time_lb == 0:
+            return 0.0
+        return self.model_flops / (
+            self.n_chips * HW["peak_flops_bf16"] * self.step_time_lb
+        )
+
+    def to_dict(self):
+        return {
+            **dataclasses.asdict(self),
+            "dominant": self.dominant,
+            "step_time_lb": self.step_time_lb,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_cost(
+    cost: Dict[str, float],
+    collectives: Dict[str, Dict[str, float]],
+    n_chips: int,
+    model_flops: float,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # cost_analysis "bytes accessed" keys vary; sum the canonical one.
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = sum(v["bytes"] for v in collectives.values())
+    hlo_total_flops = flops * n_chips
+    return Roofline(
+        compute_s=flops / HW["peak_flops_bf16"],
+        memory_s=nbytes / HW["hbm_bw"],
+        collective_s=coll_bytes / HW["ici_bw"],
+        flops_per_chip=flops,
+        bytes_per_chip=nbytes,
+        collective_bytes_per_chip=coll_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+        useful_ratio=(model_flops / hlo_total_flops) if hlo_total_flops else None,
+    )
+
+
+def model_flops_for(bundle, tokens_or_items: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N·D for training (N = active params, D = tokens), 2·N·D
+    for forward-only serving."""
+    cfg = bundle.config
+    kind = bundle.kind
+    specs = bundle.batch_specs
+
+    def n_tokens_lm():
+        if kind == "train":
+            b, s1 = specs["tokens"].shape
+            return b * (s1 - 1)
+        if kind == "prefill":
+            b, s = specs["tokens"].shape
+            return b * s
+        return specs["token"].shape[0]  # decode: 1 token per sequence
+
+    if hasattr(cfg, "active_param_count"):
+        n = cfg.active_param_count()
+        d = n_tokens_lm()
+        return (6.0 if kind == "train" else 2.0) * n * d
+    if hasattr(cfg, "param_count"):  # bert4rec
+        # embedding rows are GATHERED, not multiplied — count the transformer
+        # math + the scoring matmul explicitly.
+        b, s = specs["items"].shape
+        d_model = cfg.embed_dim
+        per_tok = cfg.n_blocks * (8 * d_model**2 + 16 * d_model**2 + 4 * s * d_model)
+        enc = b * s * per_tok
+        if kind == "recsys_train":
+            m = specs["mask_positions"].shape[1]
+            k = specs["negatives"].shape[0]
+            head = 2.0 * b * m * (k + 1) * d_model
+            return 3.0 * (enc + head)
+        if kind == "recsys_retrieval":
+            c = specs["candidates"].shape[1]
+            return enc + 2.0 * b * c * d_model
+        return enc + 2.0 * b * cfg.vocab * d_model  # score all items
+    return _gnn_model_flops(bundle)
+
+
+def _gnn_model_flops(bundle) -> float:
+    """Analytic matmul FLOPs of the GNN forward (×3 for train: bwd ≈ 2×fwd).
+    Counts dense contractions only (gather/scatter are bytes, not FLOPs)."""
+    cfg = bundle.config
+    g = bundle.batch_specs["graph"]
+    n = g["node_feat"].shape[0]
+    e = g["edge_src"].shape[0]
+    name = type(cfg).__name__
+    if name == "SAGEConfig":
+        f = 0.0
+        d_prev = cfg.d_in
+        for _ in range(cfg.n_layers):
+            f += 2.0 * n * d_prev * cfg.d_hidden * 2  # self + neigh
+            f += e * d_prev                            # mean aggregation adds
+            d_prev = cfg.d_hidden
+        f += 2.0 * n * cfg.d_hidden * cfg.out_dim
+    elif name == "GATConfig":
+        f = 0.0
+        d_prev = cfg.d_in
+        for i in range(cfg.n_layers):
+            d_out = cfg.out_dim if i == cfg.n_layers - 1 else cfg.d_hidden
+            f += 2.0 * n * d_prev * cfg.n_heads * d_out
+            f += 6.0 * e * cfg.n_heads * d_out  # scores + weighted messages
+            d_prev = cfg.n_heads * d_out
+    elif name == "SchNetConfig":
+        d = cfg.d_hidden
+        f = 0.0
+        for _ in range(cfg.n_interactions):
+            f += 2.0 * e * (cfg.n_rbf * d + d * d)  # filter MLP
+            f += 2.0 * n * d * d                     # w_in
+            f += 2.0 * e * d                         # message mult + scatter
+            f += 2.0 * n * (d * d + d * d)           # out MLP
+        f += 2.0 * n * (d * d // 2 + (d // 2) * cfg.out_dim)
+    elif name == "DimeNetConfig":
+        fdim = cfg.d_hidden
+        s = cfg.n_spherical * cfg.n_radial
+        t = g["triplets"]["in"].shape[0] if "triplets" in g else 0
+        f = 2.0 * e * (3 * fdim * fdim + fdim * fdim + cfg.n_radial * fdim)
+        for _ in range(cfg.n_blocks):
+            f += 2.0 * e * fdim * fdim                     # w_msg
+            f += 2.0 * e * fdim * cfg.n_bilinear           # w_down (gathered)
+            f += 2.0 * t * s * cfg.n_bilinear              # bilinear (sbf)
+            f += 2.0 * t * cfg.n_bilinear * fdim           # bilinear (out)
+            f += 2.0 * e * 2 * fdim * fdim                 # update MLP
+            f += 2.0 * e * cfg.n_radial * fdim             # rbf gates
+            f += 2.0 * n * (fdim * fdim + fdim * cfg.out_dim)
+    else:
+        raise ValueError(name)
+    return (3.0 if bundle.is_train else 1.0) * f

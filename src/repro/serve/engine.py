@@ -1,0 +1,142 @@
+"""gLava serving engine: the paper's data structure as an online service.
+
+Ingest path: batched edge updates (one jitted call per batch, O(1)/edge).
+Query path: batched estimators over the live sketch; reachability queries
+are served from a cached transitive closure that refreshes lazily after
+ingest (all-pairs closure amortizes over query batches — DESIGN.md
+Section 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GLavaSketch, SketchConfig, queries, reach
+from repro.core.window import SlidingWindowSketch
+
+
+@dataclasses.dataclass
+class ServeStats:
+    edges_ingested: int = 0
+    ingest_s: float = 0.0
+    queries_served: int = 0
+    query_s: float = 0.0
+    closure_refreshes: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "edges_ingested": self.edges_ingested,
+            "ingest_edges_per_s": self.edges_ingested / max(self.ingest_s, 1e-9),
+            "queries_served": self.queries_served,
+            "queries_per_s": self.queries_served / max(self.query_s, 1e-9),
+            "closure_refreshes": self.closure_refreshes,
+        }
+
+
+class SketchServer:
+    def __init__(
+        self,
+        config: SketchConfig,
+        seed: int = 0,
+        window_slices: Optional[int] = None,
+        ingest_backend: str = "scatter",
+    ):
+        if window_slices:
+            self.window = SlidingWindowSketch.empty(
+                config, window_slices, jax.random.key(seed)
+            )
+            self.sketch = None
+        else:
+            self.window = None
+            self.sketch = GLavaSketch.empty(config, jax.random.key(seed))
+        self.backend = ingest_backend
+        self.stats = ServeStats()
+        self._closure = None
+        self._closure_dirty = True
+        self._jit_edge = jax.jit(queries.edge_query)
+        self._jit_in = jax.jit(queries.node_in_flow)
+        self._jit_out = jax.jit(queries.node_out_flow)
+        self._jit_closure = jax.jit(reach.transitive_closure)
+
+    # -- ingest ---------------------------------------------------------------
+
+    def _live(self) -> GLavaSketch:
+        return self.window.window_sketch() if self.window else self.sketch
+
+    def ingest(self, src: np.ndarray, dst: np.ndarray, weights=None):
+        t0 = time.time()
+        s = jnp.asarray(src, jnp.uint32)
+        d = jnp.asarray(dst, jnp.uint32)
+        w = None if weights is None else jnp.asarray(weights, jnp.float32)
+        if self.window:
+            self.window = self.window.update(s, d, w, backend=self.backend)
+        else:
+            self.sketch = self.sketch.update(s, d, w, backend=self.backend)
+        jax.block_until_ready(self._live().counters)
+        self.stats.edges_ingested += len(src)
+        self.stats.ingest_s += time.time() - t0
+        self._closure_dirty = True
+
+    def advance_window(self):
+        if self.window:
+            self.window = self.window.advance()
+            self._closure_dirty = True
+
+    # -- queries --------------------------------------------------------------
+
+    def _timed(self, fn, *args):
+        t0 = time.time()
+        out = np.asarray(fn(self._live(), *args))
+        self.stats.query_s += time.time() - t0
+        self.stats.queries_served += int(np.size(out))
+        return out
+
+    def edge_frequency(self, src, dst):
+        return self._timed(
+            self._jit_edge, jnp.asarray(src, jnp.uint32), jnp.asarray(dst, jnp.uint32)
+        )
+
+    def in_flow(self, keys):
+        return self._timed(self._jit_in, jnp.asarray(keys, jnp.uint32))
+
+    def out_flow(self, keys):
+        return self._timed(self._jit_out, jnp.asarray(keys, jnp.uint32))
+
+    def heavy_hitters(self, keys, theta: float):
+        return self.in_flow(keys) > theta
+
+    def reachable(self, src, dst):
+        t0 = time.time()
+        live = self._live()
+        if self._closure_dirty or self._closure is None:
+            self._closure = self._jit_closure(live.counters)
+            self._closure_dirty = False
+            self.stats.closure_refreshes += 1
+        out = np.asarray(
+            reach.reach_query_precomputed(
+                live,
+                self._closure,
+                jnp.asarray(src, jnp.uint32),
+                jnp.asarray(dst, jnp.uint32),
+            )
+        )
+        self.stats.query_s += time.time() - t0
+        self.stats.queries_served += len(out)
+        return out
+
+    def subgraph_weight(self, src, dst):
+        live = self._live()
+        t0 = time.time()
+        out = float(
+            queries.subgraph_query(
+                live, jnp.asarray(src, jnp.uint32), jnp.asarray(dst, jnp.uint32)
+            )
+        )
+        self.stats.query_s += time.time() - t0
+        self.stats.queries_served += 1
+        return out

@@ -1,0 +1,94 @@
+"""Data-plane tests: LM Markov stream, bigram graph-stream view, recsys
+cloze/statics, graph generators."""
+import numpy as np
+import pytest
+
+from repro.data import graphs as gd
+from repro.data import lm as lmd
+from repro.data import recsys as rd
+
+
+def test_markov_tokens_learnable_structure():
+    gen = lmd.MarkovTokens(vocab=100, branch=4, seed=0)
+    rng = np.random.default_rng(0)
+    toks = gen.batch(8, 65, rng)
+    assert toks.shape == (8, 65)
+    assert toks.min() >= 0 and toks.max() < 100
+    # successor structure: every transition is one of the 4 successors
+    ok = 0
+    for b in range(8):
+        for t in range(64):
+            ok += toks[b, t + 1] in gen.succ[toks[b, t]]
+    assert ok == 8 * 64
+
+
+def test_bigram_stream_view():
+    toks = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    bs = lmd.bigram_stream(toks)
+    np.testing.assert_array_equal(bs["src"], [1, 2, 4, 5])
+    np.testing.assert_array_equal(bs["dst"], [2, 3, 5, 6])
+
+
+def test_interaction_sequences_left_padded():
+    rng = np.random.default_rng(1)
+    items = rd.interaction_sequences(1000, 16, 20, rng)
+    assert items.shape == (16, 20)
+    for row in items:
+        nz = np.nonzero(row)[0]
+        if len(nz):
+            # contiguous suffix: all zeros precede all items
+            assert nz[0] == 20 - len(nz)
+    assert items.max() <= 1000 and items.min() >= 0
+
+
+def test_cloze_mask_positions_static_budget():
+    rng = np.random.default_rng(2)
+    items = rd.interaction_sequences(500, 8, 40, rng)
+    mask_id = 501
+    masked, pos, tgt = rd.cloze_mask_positions(items, mask_id, 10, rng)
+    assert pos.shape == (8, 10) and tgt.shape == (8, 10)
+    n_masked_in_seq = (masked == mask_id).sum(axis=1)
+    n_targets = (tgt != 0).sum(axis=1)
+    np.testing.assert_array_equal(n_masked_in_seq, n_targets)  # budget respected
+    assert (n_targets >= 1).all()  # at least one mask per row
+    for b in range(8):
+        for j in range(10):
+            if tgt[b, j]:
+                assert masked[b, pos[b, j]] == mask_id
+                assert items[b, pos[b, j]] == tgt[b, j]
+
+
+def test_interaction_stream_drops_padding():
+    items = np.array([[0, 0, 5], [7, 0, 9]], np.int32)
+    users = np.array([100, 200], np.uint32)
+    st = rd.interaction_stream(items, users)
+    np.testing.assert_array_equal(st["dst"], [5, 7, 9])
+    np.testing.assert_array_equal(st["src"], [100, 200, 200])
+
+
+def test_edge_stream_zipf_skew():
+    rng = np.random.default_rng(3)
+    st = gd.edge_stream(10_000, 50_000, rng, zipf_a=1.5)
+    counts = np.bincount(st["src"], minlength=10_000)
+    # heavy head: top-10 sources carry far more than uniform share
+    assert counts[np.argsort(counts)[-10:]].sum() > 0.2 * 50_000
+    assert np.all(st["time"][:-1] <= st["time"][1:])  # timestamps sorted
+
+
+def test_citation_graph_homophily():
+    rng = np.random.default_rng(4)
+    g = gd.citation_graph(500, 4000, 16, 5, rng)
+    lab = g["labels"]
+    same = (lab[g["edge_src"]] == lab[g["edge_dst"]]).mean()
+    assert same > 0.4  # 70% homophilous edges + jitter
+
+
+def test_molecule_batch_structure():
+    rng = np.random.default_rng(5)
+    d = gd.molecule_batch(4, 10, 16, 20, rng)
+    assert d["node_feat"].shape == (40,)
+    assert d["positions"].shape == (40, 3)
+    assert d["labels"].shape == (4, 1)
+    # edges stay within their own molecule
+    g_of = d["graph_ids"]
+    assert (g_of[d["edge_src"]] == g_of[d["edge_dst"]]).all()

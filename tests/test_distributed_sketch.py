@@ -1,0 +1,88 @@
+"""Distributed sketch plane (paper Section 6.3) — runs in a subprocess with 8
+placeholder host devices so the rest of the suite keeps seeing 1 device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    from repro.core import GLavaSketch, SketchConfig, queries
+    from repro.core.distributed import (
+        distributed_edge_query,
+        distributed_ingest,
+        distributed_point_query,
+    )
+
+    assert jax.device_count() == 8
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, 500, 256), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 500, 256), jnp.uint32)
+    w = jnp.asarray(rng.integers(1, 4, 256), jnp.float32)
+
+    # Place the stream sharded over data, sketch rows over model.
+    import dataclasses
+    sk_sharded = dataclasses.replace(
+        sk,
+        counters=jax.device_put(
+            sk.counters, NamedSharding(mesh, P(None, "model", None))
+        ),
+    )
+    srcs = jax.device_put(src, NamedSharding(mesh, P("data")))
+    dsts = jax.device_put(dst, NamedSharding(mesh, P("data")))
+    ws = jax.device_put(w, NamedSharding(mesh, P("data")))
+
+    out = distributed_ingest(mesh, sk_sharded, srcs, dsts, ws)
+
+    # Reference: single-device ingest.
+    ref = sk.update(src, dst, w)
+    np.testing.assert_array_equal(np.asarray(out.counters), np.asarray(ref.counters))
+    print("distributed ingest == local ingest")
+
+    est = distributed_edge_query(mesh, out, src[:32], dst[:32])
+    ref_est = queries.edge_query(ref, src[:32], dst[:32])
+    np.testing.assert_allclose(np.asarray(est), np.asarray(ref_est))
+    print("distributed edge query OK")
+
+    for direction, ref_fn in (
+        ("in", queries.node_in_flow),
+        ("out", queries.node_out_flow),
+    ):
+        pq = distributed_point_query(mesh, out, src[:16], direction)
+        ref_pq = ref_fn(ref, src[:16])
+        np.testing.assert_allclose(np.asarray(pq), np.asarray(ref_pq))
+    print("distributed point queries OK")
+    print("ALL_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_sketch_matches_local():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ALL_OK" in proc.stdout

@@ -1,0 +1,100 @@
+"""Property tests for the limb-based pairwise-independent hash family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+
+U32 = st.integers(min_value=0, max_value=2**32 - 1)
+PVAL = st.integers(min_value=0, max_value=H.MERSENNE_P - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(1, H.MERSENNE_P - 1), x=U32)
+def test_mulmod31_exact(a, x):
+    dev = int(H.mulmod31(jnp.uint32(a), jnp.uint32(H._reduce31(jnp.uint32(x)))))
+    ref = (a * (x % H.MERSENNE_P)) % H.MERSENNE_P
+    assert dev == ref
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    a=st.integers(1, H.MERSENNE_P - 1),
+    b=PVAL,
+    x=U32,
+    w=st.integers(2, 2**20),
+)
+def test_affine_hash_matches_bigint(a, b, x, w):
+    dev = int(H.affine_hash(jnp.uint32(x), jnp.uint32(a), jnp.uint32(b), w))
+    ref = ((a * (x % H.MERSENNE_P) + b) % H.MERSENNE_P) % w
+    assert dev == ref
+
+
+def test_affine_hash_batch_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.integers(1, H.MERSENNE_P, 4096, dtype=np.uint32)
+    b = rng.integers(0, H.MERSENNE_P, 4096, dtype=np.uint32)
+    x = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+    dev = np.asarray(H.affine_hash(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), 12345))
+    ref = H.affine_hash_np(x, a, b, 12345)
+    np.testing.assert_array_equal(dev, ref)
+
+
+def test_family_shapes_and_range():
+    fam = H.make_hash_family(jax.random.key(0), 5, 777)
+    keys = jnp.arange(1000, dtype=jnp.uint32)
+    hs = fam(keys)
+    assert hs.shape == (5, 1000)
+    assert int(hs.min()) >= 0 and int(hs.max()) < 777
+    # 2D keys broadcast
+    hs2 = fam(keys.reshape(10, 100))
+    assert hs2.shape == (5, 10, 100)
+    np.testing.assert_array_equal(np.asarray(hs2).reshape(5, -1), np.asarray(hs))
+
+
+def test_pairwise_collision_rate():
+    """Empirical Pr[h(x)=h(y)] for x != y should be ~1/w (2-universality)."""
+    w = 256
+    fam = H.make_hash_family(jax.random.key(3), 64, w)  # 64 independent fns
+    keys = jnp.arange(512, dtype=jnp.uint32)
+    hs = np.asarray(fam(keys))  # (64, 512)
+    coll = 0
+    tot = 0
+    rng = np.random.default_rng(0)
+    for _ in range(2000):
+        i, j = rng.integers(0, 512, 2)
+        if i == j:
+            continue
+        coll += int(np.sum(hs[:, i] == hs[:, j]))
+        tot += hs.shape[0]
+    rate = coll / tot
+    assert rate < 3.0 / w, f"collision rate {rate:.4f} vs 1/w={1/w:.4f}"
+
+
+def test_sign_hash_balance():
+    fam = H.make_hash_family(jax.random.key(9), 8, 1024)
+    keys = jnp.arange(4096, dtype=jnp.uint32)
+    s = np.asarray(fam.signs(keys))
+    assert set(np.unique(s)) <= {-1, 1}
+    # Each row should be roughly balanced.
+    frac = np.abs(s.mean(axis=1))
+    assert np.all(frac < 0.15), frac
+
+
+def test_mix_keys_spreads():
+    x = jnp.arange(10000, dtype=jnp.uint32)
+    y = jnp.zeros(10000, dtype=jnp.uint32)
+    m = np.asarray(H.mix_keys(x, y))
+    assert len(np.unique(m)) == 10000  # injective on this range
+    # mixing is order-sensitive (directed edges)
+    m2 = np.asarray(H.mix_keys(y, x))
+    assert np.sum(m == m2) <= 1
+
+
+def test_fnv1a_stable():
+    assert H.fnv1a_label("192.168.29.1") == H.fnv1a_label("192.168.29.1")
+    assert H.fnv1a_label("a") != H.fnv1a_label("b")
+    assert H.fnv1a_label(7) == 7
+    assert H.fnv1a_label(2**32 + 7) == 7  # uint32 wrap

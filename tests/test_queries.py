@@ -1,0 +1,214 @@
+"""Query-estimator tests against exact answers on the paper's Fig. 1 stream
+and randomized streams."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GLavaSketch, SketchConfig, queries, reach, fnv1a_label
+
+# The paper's Fig. 1 stream: (a,b) (a,c) (b,c)... with the aggregate weights
+# implied by Figs. 2/5: ab:5? We use the edge list readable from Fig. 1:
+# a->b (weight 5 shown in Fig 2 bucket), but for exactness we build a small
+# concrete multigraph of our own with known counts.
+LABELS = list("abcdefg")
+KEY = {l: fnv1a_label(l) for l in LABELS}
+EDGES = [
+    ("a", "b"), ("a", "b"), ("a", "c"), ("b", "c"), ("b", "a"),
+    ("c", "e"), ("c", "e"), ("c", "e"), ("d", "g"), ("g", "b"),
+    ("e", "d"), ("f", "a"), ("b", "f"), ("b", "a"),
+]
+
+
+def _fig1_sketch(cfg=None, key=0):
+    cfg = cfg or SketchConfig(depth=4, width_rows=256, width_cols=256)
+    sk = GLavaSketch.empty(cfg, jax.random.key(key))
+    src = jnp.asarray([KEY[s] for s, _ in EDGES], jnp.uint32)
+    dst = jnp.asarray([KEY[d] for _, d in EDGES], jnp.uint32)
+    return sk.update(src, dst)
+
+
+def _k(*labels):
+    return jnp.asarray([KEY[l] for l in labels], jnp.uint32)
+
+
+def test_edge_query_exact_and_overestimate():
+    sk = _fig1_sketch()
+    cnt = collections.Counter(EDGES)
+    est = np.asarray(queries.edge_query(sk, _k("a", "c", "g"), _k("b", "e", "b")))
+    ex = np.array([cnt[("a", "b")], cnt[("c", "e")], cnt[("g", "b")]], float)
+    assert np.all(est >= ex)
+    # With w=256 >> 7 nodes, collisions are overwhelmingly unlikely.
+    np.testing.assert_array_equal(est, ex)
+
+
+def test_point_queries_match_exact():
+    sk = _fig1_sketch()
+    in_b = sum(1 for _, d in EDGES if d == "b")
+    out_b = sum(1 for s, _ in EDGES if s == "b")
+    est_in = float(queries.node_in_flow(sk, _k("b"))[0])
+    est_out = float(queries.node_out_flow(sk, _k("b"))[0])
+    assert est_in >= in_b and est_out >= out_b
+    assert est_in == in_b and est_out == out_b  # w >> n
+
+
+def test_monitor_step_alarm():
+    sk = _fig1_sketch()
+    in_b = sum(1 for _, d in EDGES if d == "b")
+    alarm, sk2 = queries.monitor_step(
+        sk, _k("g"), _k("b"), jnp.ones(1), _k("b")[0], theta=in_b + 0.5
+    )
+    assert bool(alarm)  # new edge pushes over θ
+    alarm2, _ = queries.monitor_step(
+        sk, _k("g"), _k("b"), jnp.ones(1), _k("b")[0], theta=in_b + 10
+    )
+    assert not bool(alarm2)
+    # step 3 updated all d sketches (each gains the edge weight)
+    assert float(sk2.counters.sum()) == float(sk.counters.sum()) + sk.depth
+
+
+def test_reachability_no_false_negatives():
+    """Hashing maps a real path to a path in the sketch — r(a,b) true implies
+    r̃(a,b) true, for ANY hash draw (paper Section 4.3 one-sided error)."""
+    for seed in range(5):
+        cfg = SketchConfig(depth=3, width_rows=8, width_cols=8)  # tiny, collision-heavy
+        sk = GLavaSketch.empty(cfg, jax.random.key(seed))
+        src = jnp.asarray([1, 2, 3, 10], jnp.uint32)
+        dst = jnp.asarray([2, 3, 4, 11], jnp.uint32)
+        sk = sk.update(src, dst)
+        r = queries.reach_query(
+            sk,
+            jnp.asarray([1, 1, 2], jnp.uint32),
+            jnp.asarray([4, 3, 4], jnp.uint32),
+        )
+        assert bool(jnp.all(r)), f"false negative at seed {seed}"
+
+
+def test_reachability_precision_with_width():
+    """False-positive rate must drop as w grows (collision argument)."""
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, 50, 60), jnp.uint32)
+    dst = jnp.asarray(rng.integers(50, 100, 60), jnp.uint32)  # bipartite: no 2-hop back-paths
+    fp = {}
+    for w in (8, 128):
+        cfg = SketchConfig(depth=4, width_rows=w, width_cols=w)
+        sk = GLavaSketch.empty(cfg, jax.random.key(1)).update(src, dst)
+        # dst-side nodes cannot reach src-side nodes in the true graph
+        q_from = jnp.asarray(rng.integers(50, 100, 100), jnp.uint32)
+        q_to = jnp.asarray(rng.integers(0, 50, 100), jnp.uint32)
+        r = np.asarray(queries.reach_query(sk, q_from, q_to))
+        fp[w] = r.mean()
+    assert fp[128] <= fp[8]
+    assert fp[128] < 0.2
+
+
+def test_subgraph_semantics_zero_propagation():
+    sk = _fig1_sketch()
+    # {(a,b),(a,c)} exists: estimate >= 3 (2+1)
+    est = float(queries.subgraph_query(sk, _k("a", "a"), _k("b", "c")))
+    assert est >= 3
+    # a subgraph with a non-existent edge must estimate 0 (revised semantics)
+    est0 = float(queries.subgraph_query(sk, _k("a", "g"), _k("b", "a")))
+    assert est0 == 0.0
+    est0o = float(queries.subgraph_query_opt(sk, _k("a", "g"), _k("b", "a")))
+    assert est0o == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_fopt_leq_f(seed):
+    """Paper Section 4.4: f̃'(Q) <= f̃(Q)."""
+    rng = np.random.default_rng(seed)
+    cfg = SketchConfig(depth=3, width_rows=16, width_cols=16)
+    sk = GLavaSketch.empty(cfg, jax.random.key(seed))
+    src = jnp.asarray(rng.integers(0, 30, 50), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 30, 50), jnp.uint32)
+    sk = sk.update(src, dst)
+    qs, qd = src[:4], dst[:4]
+    f = float(queries.subgraph_query(sk, qs, qd))
+    fo = float(queries.subgraph_query_opt(sk, qs, qd))
+    assert fo <= f + 1e-5
+
+
+def test_wildcard_queries():
+    sk = _fig1_sketch()
+    out_a = sum(1 for s, _ in EDGES if s == "a")
+    est = float(queries.wildcard_edge_query(sk, _k("a"), None)[0])
+    assert est == out_a
+    in_c = sum(1 for _, d in EDGES if d == "c")
+    est2 = float(queries.wildcard_edge_query(sk, None, _k("c"))[0])
+    assert est2 == in_c
+    total = float(queries.wildcard_edge_query(sk, None, None)[0])
+    assert total == len(EDGES)
+
+
+def test_bound_wildcard_common_neighbors():
+    sk = _fig1_sketch()
+    # Q6: {(*1, b), (b? no — (c, *1)}: pairs (u->b, c->u). True pairs:
+    # u->b from {a(x2... a->b twice), g->b}; c->u edges: c->e x3.
+    # Overlap u in {e}: u=e needs e->b (absent). So count = 0.
+    est = float(queries.bound_wildcard_path2(sk, _k("b"), _k("c"))[0])
+    assert est >= 0
+    # Construct a positive case: pairs (u->a, b->u): u=f: f->a yes, b->f yes -> 1*1
+    est2 = float(queries.bound_wildcard_path2(sk, _k("a"), _k("b"))[0])
+    true2 = 2 * 1  # u=a? a->a no. u=f: f->a(1) and b->f(1) ->1; u=a no; also b->a(x2) & ... u must satisfy u->a and b->u: u=f only -> 1. Plus u=b? b->a yes (2), b->b no.
+    assert est2 >= 1
+
+
+def test_triangle_query():
+    cfg = SketchConfig(depth=4, width_rows=128, width_cols=128)
+    sk = GLavaSketch.empty(cfg, jax.random.key(3))
+    src = jnp.asarray([1, 2, 3], jnp.uint32)
+    dst = jnp.asarray([2, 3, 1], jnp.uint32)
+    sk = sk.update(src, dst)
+    t = float(
+        queries.triangle_query(
+            sk,
+            jnp.asarray(1, jnp.uint32),
+            jnp.asarray(2, jnp.uint32),
+            jnp.asarray(3, jnp.uint32),
+        )
+    )
+    assert t == 3.0  # sum of the three unit edges
+    t0 = float(
+        queries.triangle_query(
+            sk,
+            jnp.asarray(1, jnp.uint32),
+            jnp.asarray(3, jnp.uint32),
+            jnp.asarray(2, jnp.uint32),
+        )
+    )
+    assert t0 == 0.0  # reversed triangle absent
+
+
+def test_sketch_pagerank_is_distribution():
+    sk = _fig1_sketch()
+    pr = np.asarray(queries.sketch_pagerank(sk, iters=16))
+    np.testing.assert_allclose(pr.sum(axis=1), 1.0, atol=1e-3)
+    assert np.all(pr >= 0)
+
+
+def test_transitive_closure_matches_bfs():
+    rng = np.random.default_rng(4)
+    n = 32
+    adj = (rng.random((n, n)) < 0.06).astype(np.float32)
+    closure = np.asarray(reach.transitive_closure(jnp.asarray(adj)))
+    # Floyd-Warshall reference
+    ref = adj > 0
+    ref = ref | np.eye(n, dtype=bool)
+    for k in range(n):
+        ref = ref | (ref[:, k : k + 1] & ref[k : k + 1, :])
+    np.testing.assert_array_equal(closure, ref)
+
+
+def test_khop_reach():
+    adj = jnp.asarray(
+        np.array([[0, 1, 0], [0, 0, 1], [0, 0, 0]], np.float32)
+    )
+    r1 = np.asarray(reach.k_hop_reach(adj, 1))
+    assert r1[0, 1] and not r1[0, 2]
+    r2 = np.asarray(reach.k_hop_reach(adj, 2))
+    assert r2[0, 2]

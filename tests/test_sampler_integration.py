@@ -1,0 +1,101 @@
+"""Neighbor sampler + gLava integrations (GNN degree sketch, recsys
+popularity sketch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sketch import SketchConfig
+from repro.data.graphs import build_triplets, citation_graph, random_edges
+from repro.integration.popularity import InteractionPopularitySketch
+from repro.integration.sketch_sampler import StreamingDegreeSketch, sketch_weighted_seeds
+from repro.models.gnn.sampler import CSRGraph, sample_subgraph, sampled_block_sizes
+
+
+def test_csr_and_degrees():
+    src = np.array([0, 1, 2, 0, 3], np.int32)
+    dst = np.array([1, 2, 0, 2, 0], np.int32)
+    g = CSRGraph.from_edges(src, dst, 4)
+    np.testing.assert_array_equal(g.degree(np.arange(4)), [2, 1, 2, 0])
+    rng = np.random.default_rng(0)
+    nbrs = g.sample_neighbors(np.array([0, 3]), 4, rng)
+    assert set(nbrs[0]) <= {2, 3}   # in-neighbors of 0
+    assert set(nbrs[1]) == {3}      # isolated -> self-loop
+
+
+def test_sample_subgraph_static_shapes():
+    rng = np.random.default_rng(1)
+    src, dst = random_edges(500, 4000, rng)
+    g = CSRGraph.from_edges(src, dst, 500)
+    seeds = rng.choice(500, 16, replace=False).astype(np.int32)
+    sub = sample_subgraph(g, seeds, (5, 3), rng)
+    n_pad, e_pad = sampled_block_sizes(16, (5, 3))
+    assert sub["nodes"].shape == (n_pad,)
+    assert sub["edge_src"].shape == (e_pad,)
+    assert sub["edge_mask"].all()  # sampler always fills (with replacement)
+    # message edges point from sampled neighbor (local id) to its frontier node
+    assert sub["edge_dst"][:80].max() < 16
+
+
+def test_streaming_degree_sketch_overestimates():
+    rng = np.random.default_rng(2)
+    src, dst = random_edges(300, 5000, rng)
+    sk = StreamingDegreeSketch(SketchConfig(depth=4, width_rows=256, width_cols=256))
+    for lo in range(0, 5000, 1000):
+        sk.observe(src[lo : lo + 1000], dst[lo : lo + 1000])
+    est_out = sk.degree_estimates(np.arange(300, dtype=np.uint32), "out")
+    exact_out = np.bincount(src, minlength=300)
+    assert np.all(est_out >= exact_out - 1e-5)
+    # weights form a distribution and favor high-degree nodes
+    w = sk.seed_weights(300)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-9)
+    hi, lo_ = exact_out.argmax(), exact_out.argmin()
+    assert w[hi] > w[lo_]
+    seeds = sketch_weighted_seeds(sk, 300, 32, rng)
+    assert len(set(seeds.tolist())) == 32
+
+
+def test_popularity_sketch_negative_sampling():
+    rng = np.random.default_rng(3)
+    n_items = 2000
+    pop = InteractionPopularitySketch(n_items, width_users=512, width_items=1024)
+    # items 1..20 are 50x hotter
+    hot = rng.integers(1, 21, 20_000).astype(np.uint32)
+    cold = rng.integers(21, n_items + 1, 4_000).astype(np.uint32)
+    items = np.concatenate([hot, cold])
+    users = rng.integers(0, 5000, len(items)).astype(np.uint32)
+    pop.observe(users, items)
+    est_hot = pop.item_popularity(np.arange(1, 21, dtype=np.uint32)).mean()
+    est_cold = pop.item_popularity(np.arange(500, 520, dtype=np.uint32)).mean()
+    assert est_hot > 10 * est_cold
+    negs = pop.sample_negatives(512, rng)
+    frac_hot = np.mean(negs <= 20)
+    assert frac_hot > 0.2  # popularity-weighted: hot items over-represented
+
+
+def test_build_triplets_matches_bruteforce():
+    rng = np.random.default_rng(4)
+    src, dst = random_edges(20, 60, rng)
+    trip = build_triplets(src, dst)
+    got = {
+        (int(trip["in"][i]), int(trip["out"][i]))
+        for i in range(len(trip["in"]))
+        if trip["mask"][i] > 0
+    }
+    want = set()
+    for eo in range(60):
+        j, i = int(src[eo]), int(dst[eo])
+        for ei in range(60):
+            if int(dst[ei]) == j and int(src[ei]) != i:
+                want.add((ei, eo))
+    assert got == want
+    assert not trip["truncated"]
+
+
+def test_build_triplets_budget_truncation():
+    # star graph: 50 in-edges (k->0) and 50 out-edges (0->j) => ~2450 triplets
+    src = np.concatenate([np.arange(1, 51), np.zeros(50)]).astype(np.int32)
+    dst = np.concatenate([np.zeros(50), np.arange(51, 101)]).astype(np.int32)
+    trip = build_triplets(src, dst, budget=64)
+    assert trip["truncated"]
+    assert trip["mask"].sum() == 64

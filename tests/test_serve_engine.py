@@ -1,0 +1,69 @@
+"""Serving-engine behaviour tests: ingest/query stats, closure caching,
+windowed service, and the full mixed workload."""
+import numpy as np
+import pytest
+
+from repro.core.sketch import SketchConfig
+from repro.serve.engine import SketchServer
+
+
+@pytest.fixture()
+def server():
+    return SketchServer(SketchConfig(depth=3, width_rows=128, width_cols=128))
+
+
+def test_ingest_and_edge_query(server):
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 1000, 500).astype(np.uint32)
+    dst = rng.integers(0, 1000, 500).astype(np.uint32)
+    server.ingest(src, dst)
+    est = server.edge_frequency(src[:50], dst[:50])
+    assert np.all(est >= 1)
+    assert server.stats.edges_ingested == 500
+
+
+def test_closure_cache_invalidation(server):
+    src = np.array([1, 2], np.uint32)
+    dst = np.array([2, 3], np.uint32)
+    server.ingest(src, dst)
+    r1 = server.reachable(np.array([1], np.uint32), np.array([3], np.uint32))
+    assert bool(r1[0])
+    assert server.stats.closure_refreshes == 1
+    # second query: cached closure, no refresh
+    server.reachable(np.array([2], np.uint32), np.array([3], np.uint32))
+    assert server.stats.closure_refreshes == 1
+    # ingest dirties the cache
+    server.ingest(np.array([3], np.uint32), np.array([4], np.uint32))
+    r2 = server.reachable(np.array([1], np.uint32), np.array([4], np.uint32))
+    assert bool(r2[0])
+    assert server.stats.closure_refreshes == 2
+
+
+def test_windowed_server_expiry():
+    server = SketchServer(
+        SketchConfig(depth=3, width_rows=128, width_cols=128), window_slices=2
+    )
+    server.ingest(np.array([10], np.uint32), np.array([20], np.uint32))
+    assert server.edge_frequency(np.array([10], np.uint32), np.array([20], np.uint32))[0] == 1
+    server.advance_window()
+    server.advance_window()  # wraps: slice holding (10,20) zeroed
+    est = server.edge_frequency(np.array([10], np.uint32), np.array([20], np.uint32))
+    assert est[0] == 0
+
+
+def test_heavy_hitter_monitor(server):
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 100, 2000).astype(np.uint32)
+    dst = np.full(2000, 7, np.uint32)  # flood node 7
+    server.ingest(src, dst)
+    flags = server.heavy_hitters(np.arange(10, dtype=np.uint32), theta=100.0)
+    assert flags[7]
+    assert not flags[3]
+
+
+def test_subgraph_weight(server):
+    server.ingest(np.array([1, 2], np.uint32), np.array([2, 3], np.uint32))
+    w = server.subgraph_weight(np.array([1, 2], np.uint32), np.array([2, 3], np.uint32))
+    assert w >= 2.0
+    w0 = server.subgraph_weight(np.array([1, 5], np.uint32), np.array([2, 6], np.uint32))
+    assert w0 == 0.0

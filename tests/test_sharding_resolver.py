@@ -1,0 +1,70 @@
+"""Sharding resolver unit tests: divisibility fallback, axis dedup, rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ResolveReport, default_rules, resolve_pspec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device "production-shaped" mesh: axis sizes matter, not devices
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+
+
+def _rules16(mesh):
+    # pretend-16-way semantics: use a fake mesh shape via a real Mesh of the
+    # production shape is impossible on 1 device, so test the arithmetic
+    # against an object exposing .shape
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    return FakeMesh()
+
+
+def test_divisible_dims_shard(mesh):
+    fm = _rules16(mesh)
+    rules = {"vocab": ("model",), "embed": ("pod", "data")}
+    spec = resolve_pspec(("vocab", "embed"), (32768, 6144), fm, rules)
+    assert spec == P("model", ("pod", "data"))
+
+
+def test_non_divisible_falls_back_replicated():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rep = ResolveReport()
+    rules = {"heads": ("model",)}
+    spec = resolve_pspec(("heads",), (56,), FakeMesh(), rules, rep, path="wq")
+    assert spec == P()
+    assert any("56" in f for f in rep.fallbacks)
+
+
+def test_partial_prefix_used_when_full_product_fails():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16}
+
+    rules = {"batch": ("pod", "data")}
+    # 16 % 32 != 0 but 16 % 2 == 0 -> shard over pod only
+    spec = resolve_pspec(("batch",), (16,), FakeMesh(), rules)
+    assert spec == P("pod")
+
+
+def test_axis_never_reused_across_dims():
+    class FakeMesh:
+        shape = {"model": 16}
+
+    rules = {"heads": ("model",), "ffn": ("model",)}
+    spec = resolve_pspec(("heads", "ffn"), (64, 64), FakeMesh(), rules)
+    # second dim must NOT reuse the model axis
+    assert spec == P("model")
+
+
+def test_trailing_nones_trimmed():
+    class FakeMesh:
+        shape = {"model": 16}
+
+    spec = resolve_pspec((None, "vocab", None), (5, 32, 7), FakeMesh(), {"vocab": ("model",)})
+    assert spec == P(None, "model")

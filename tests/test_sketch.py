@@ -1,0 +1,206 @@
+"""System-invariant tests for GLavaSketch and baselines (paper Section 3.2)."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CountMin,
+    CountSketch,
+    GLavaSketch,
+    GSketch,
+    NodeCountMin,
+    SketchConfig,
+)
+
+
+def _stream(seed, n, n_nodes=200, max_w=5):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n).astype(np.uint32)
+    dst = rng.integers(0, n_nodes, n).astype(np.uint32)
+    w = rng.integers(1, max_w + 1, n).astype(np.float32)
+    return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+
+
+def _exact_counts(src, dst, w):
+    cnt = collections.Counter()
+    for s, d, wt in zip(np.asarray(src), np.asarray(dst), np.asarray(w)):
+        cnt[(int(s), int(d))] += float(wt)
+    return cnt
+
+
+@pytest.fixture(scope="module")
+def small_sketch():
+    cfg = SketchConfig(depth=4, width_rows=128, width_cols=128)
+    return GLavaSketch.empty(cfg, jax.random.key(0))
+
+
+def test_ingest_backends_bit_equal(small_sketch):
+    src, dst, w = _stream(0, 700)
+    a = small_sketch.update(src, dst, w, backend="scatter")
+    b = small_sketch.update(src, dst, w, backend="onehot")
+    c = small_sketch.update_sequential(src, dst, w)
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(b.counters))
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(c.counters))
+
+
+def test_mass_preservation(small_sketch):
+    """Every sketch's total mass equals the total stream weight exactly."""
+    src, dst, w = _stream(1, 300)
+    sk = small_sketch.update(src, dst, w)
+    per_sketch = np.asarray(jnp.sum(sk.counters, axis=(1, 2)))
+    np.testing.assert_allclose(per_sketch, float(jnp.sum(w)), rtol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 200))
+def test_linearity_property(seed, n):
+    """sketch(S1 || S2) == sketch(S1) + sketch(S2) — paper Section 6.3."""
+    cfg = SketchConfig(depth=2, width_rows=64, width_cols=64)
+    empty = GLavaSketch.empty(cfg, jax.random.key(7))
+    src, dst, w = _stream(seed, n)
+    k = n // 2
+    whole = empty.update(src, dst, w)
+    parts = empty.update(src[:k], dst[:k], w[:k]).merge(
+        empty.update(src[k:], dst[k:], w[k:])
+    )
+    np.testing.assert_array_equal(np.asarray(whole.counters), np.asarray(parts.counters))
+
+
+def test_turnstile_delete_roundtrip(small_sketch):
+    src, dst, w = _stream(2, 150)
+    sk = small_sketch.update(src, dst, w).delete(src, dst, w)
+    np.testing.assert_array_equal(
+        np.asarray(sk.counters), np.asarray(small_sketch.counters)
+    )
+
+
+def test_space_is_sublinear_constant_in_stream_length(small_sketch):
+    """Constraint 1 of Section 3.2: |S_G| independent of |G|."""
+    src, dst, w = _stream(3, 2000)
+    sk = small_sketch.update(src, dst, w)
+    assert sk.counters.shape == small_sketch.counters.shape
+    assert sk.config.space_bytes() == 4 * 4 * 128 * 128
+
+
+def test_nonsquare_uses_two_hashes():
+    cfg = SketchConfig(depth=3, width_rows=256, width_cols=64)
+    sk = GLavaSketch.empty(cfg, jax.random.key(1))
+    assert not cfg.is_square
+    assert not np.array_equal(np.asarray(sk.row_hash.a), np.asarray(sk.col_hash.a))
+    src, dst, w = _stream(4, 100)
+    sk = sk.update(src, dst, w)
+    assert sk.counters.shape == (3, 256, 64)
+    np.testing.assert_allclose(
+        np.asarray(sk.counters.sum(axis=(1, 2))), float(w.sum())
+    )
+
+
+def test_square_shares_hash():
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+    sk = GLavaSketch.empty(cfg, jax.random.key(1))
+    np.testing.assert_array_equal(
+        np.asarray(sk.row_hash.a), np.asarray(sk.col_hash.a)
+    )
+
+
+def test_undirected_symmetry():
+    cfg = SketchConfig(depth=2, width_rows=64, width_cols=64, directed=False)
+    sk = GLavaSketch.empty(cfg, jax.random.key(5))
+    src, dst, w = _stream(6, 120)
+    sk = sk.update(src, dst, w)
+    c = np.asarray(sk.counters)
+    np.testing.assert_allclose(c, np.transpose(c, (0, 2, 1)))
+
+
+def test_conservative_update_dominated_by_vanilla():
+    """CU estimates are still over-estimates but never exceed vanilla's."""
+    from repro.core import queries
+
+    cfg = SketchConfig(depth=3, width_rows=32, width_cols=32)
+    empty = GLavaSketch.empty(cfg, jax.random.key(2))
+    src, dst, w = _stream(7, 400, n_nodes=100)
+    vanilla = empty.update(src, dst, w)
+    cu = empty.update_conservative(src, dst, w)
+    exact = _exact_counts(src, dst, w)
+    qs, qd = src[:50], dst[:50]
+    est_v = np.asarray(queries.edge_query(vanilla, qs, qd))
+    est_c = np.asarray(queries.edge_query(cu, qs, qd))
+    ex = np.array(
+        [exact[(int(s), int(d))] for s, d in zip(np.asarray(qs), np.asarray(qd))]
+    )
+    assert np.all(est_c >= ex - 1e-6)
+    assert np.all(est_c <= est_v + 1e-6)
+
+
+def test_countmin_edge_query_overestimates():
+    src, dst, w = _stream(8, 500, n_nodes=80)
+    cm = CountMin.empty(4, 512, jax.random.key(0)).update(src, dst, w)
+    exact = _exact_counts(src, dst, w)
+    est = np.asarray(cm.edge_query(src[:64], dst[:64]))
+    ex = np.array(
+        [exact[(int(s), int(d))] for s, d in zip(np.asarray(src[:64]), np.asarray(dst[:64]))]
+    )
+    assert np.all(est >= ex - 1e-6)
+
+
+def test_node_countmin_flows():
+    src, dst, w = _stream(9, 400, n_nodes=50)
+    ncm = NodeCountMin.empty(4, 256, jax.random.key(0)).update(src, dst, w)
+    outs = np.asarray(ncm.out_flow(jnp.arange(50, dtype=jnp.uint32)))
+    exact_out = np.zeros(50)
+    for s, wt in zip(np.asarray(src), np.asarray(w)):
+        exact_out[int(s)] += float(wt)
+    assert np.all(outs >= exact_out - 1e-5)
+
+
+def test_countsketch_unbiased_ish():
+    """CountSketch median estimate should straddle the truth, not only
+    overestimate (unlike CountMin)."""
+    src, dst, w = _stream(10, 1000, n_nodes=60)
+    from repro.core.hashing import mix_keys
+
+    cs = CountSketch.empty(5, 256, jax.random.key(0))
+    keys = mix_keys(src, dst)
+    cs = cs.update(keys, w)
+    exact = _exact_counts(src, dst, w)
+    qk = mix_keys(src[:100], dst[:100])
+    est = np.asarray(cs.query(qk))
+    ex = np.array(
+        [exact[(int(s), int(d))] for s, d in zip(np.asarray(src[:100]), np.asarray(dst[:100]))]
+    )
+    err = est - ex
+    # Signed errors in both directions and small on average.
+    assert np.abs(np.mean(err)) < np.mean(np.abs(ex)) * 0.5 + 1.0
+
+
+def test_gsketch_partition_and_query():
+    src, dst, w = _stream(11, 600, n_nodes=100)
+    sample = np.asarray(src[:100])
+    gs = GSketch.from_sample(4, 1024, 4, sample, jax.random.key(0))
+    gs = gs.update(src, dst, w)
+    exact = _exact_counts(src, dst, w)
+    est = np.asarray(gs.edge_query(src[:64], dst[:64]))
+    ex = np.array(
+        [exact[(int(s), int(d))] for s, d in zip(np.asarray(src[:64]), np.asarray(dst[:64]))]
+    )
+    assert np.all(est >= ex - 1e-6)
+
+
+def test_for_error_sizing():
+    cfg = SketchConfig.for_error(epsilon=0.01, delta=0.01)
+    assert cfg.width_rows == int(np.ceil(np.e / np.sqrt(0.01)))
+    assert cfg.depth == int(np.ceil(np.log(100)))
+
+
+def test_counter_exactness_guard():
+    """fp32 counters are exact for integer-valued mass below 2**24."""
+    cfg = SketchConfig(depth=1, width_rows=2, width_cols=2)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    src = jnp.zeros(1000, jnp.uint32)
+    dst = jnp.zeros(1000, jnp.uint32)
+    sk = sk.update(src, dst)
+    assert float(sk.counters.sum()) == 1000.0

@@ -1,0 +1,58 @@
+"""Sliding-window sketch tests (paper Section 6.1.1 time-window deletion)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GLavaSketch, SketchConfig, SlidingWindowSketch, queries
+
+
+def test_window_expiry_drops_old_slices():
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+    win = SlidingWindowSketch.empty(cfg, n_slices=3, key=jax.random.key(0))
+    e = lambda s, d: (jnp.asarray([s], jnp.uint32), jnp.asarray([d], jnp.uint32))
+
+    win = win.update(*e(1, 2))          # slice 0
+    win = win.advance().update(*e(3, 4))  # slice 1
+    win = win.advance().update(*e(5, 6))  # slice 2
+    sk = win.window_sketch()
+    assert float(sk.counters[0].sum()) == 3.0
+
+    # Advancing wraps onto slice 0 and expires edge (1,2).
+    win = win.advance().update(*e(7, 8))
+    sk = win.window_sketch()
+    assert float(sk.counters[0].sum()) == 3.0
+    est = queries.edge_query(
+        sk, jnp.asarray([1], jnp.uint32), jnp.asarray([2], jnp.uint32)
+    )
+    # (1,2) expired; with w=64 and 3 remaining edges a collision is unlikely.
+    assert float(est[0]) == 0.0
+
+
+def test_window_sum_equals_manual_merge():
+    cfg = SketchConfig(depth=2, width_rows=32, width_cols=32)
+    win = SlidingWindowSketch.empty(cfg, n_slices=4, key=jax.random.key(1))
+    rng = np.random.default_rng(0)
+    all_src, all_dst = [], []
+    for _ in range(4):
+        src = jnp.asarray(rng.integers(0, 100, 20), jnp.uint32)
+        dst = jnp.asarray(rng.integers(0, 100, 20), jnp.uint32)
+        win = win.update(src, dst).advance()
+        all_src.append(src)
+        all_dst.append(dst)
+    # Ring never wrapped past capacity-1 advances? We advanced 4 times on 4
+    # slices: the last advance wrapped to slice 0 and zeroed it.
+    sk_win = win.window_sketch()
+    ref = GLavaSketch.empty(cfg, jax.random.key(1))
+    ref = ref.update(jnp.concatenate(all_src[1:]), jnp.concatenate(all_dst[1:]))
+    # Hash family of window template and ref may differ (different key paths).
+    # Compare total mass only for the wrap effect:
+    assert float(sk_win.counters[0].sum()) == 60.0
+
+
+def test_decay_variant():
+    cfg = SketchConfig(depth=2, width_rows=32, width_cols=32)
+    sk = GLavaSketch.empty(cfg, jax.random.key(2))
+    src = jnp.asarray([1, 2], jnp.uint32)
+    dst = jnp.asarray([3, 4], jnp.uint32)
+    sk = sk.update(src, dst).scale(0.5)
+    assert float(sk.counters[0].sum()) == 1.0
