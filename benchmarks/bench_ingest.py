@@ -1,8 +1,20 @@
-"""Ingest-path benchmarks (paper Section 3.2 constraints): µs/edge for the
-paper-faithful scalar path, the vectorized scatter, the one-hot MXU
-formulation, and the Pallas kernel (interpret mode on this host — the Pallas
-number is a CORRECTNESS artifact here; its perf claim is the roofline)."""
+"""Ingest-path benchmarks (paper Section 3.2 constraints): µs/edge and
+edges/sec for the paper-faithful scalar path and every IngestEngine backend
+(scatter / onehot / pallas — Pallas runs in interpret mode on CPU hosts, so
+its number here is a CORRECTNESS artifact; its perf claim is the roofline).
+
+CLI (the backend-sweep mode):
+
+    python -m benchmarks.bench_ingest --backend scatter
+    python -m benchmarks.bench_ingest --backend all --batch 65536
+
+reports edges/sec per requested backend; ``run()`` (the trajectory entry
+point) sweeps all backends so results/benchmarks.json records edges/sec per
+backend from every run.
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -10,35 +22,64 @@ import numpy as np
 
 from benchmarks.common import record, time_fn
 from repro.core import GLavaSketch, SketchConfig
+from repro.core.ingest import BACKENDS
+
+
+def _stream(b: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32),
+        jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32),
+        jnp.asarray(rng.integers(1, 5, b), jnp.float32),
+    )
+
+
+def backend_sweep(backends=BACKENDS, batch: int = 32768, depth: int = 4,
+                  width: int = 1024):
+    """Time every requested ingest backend on one edge batch; records and
+    returns {backend: edges_per_s}."""
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    out = {}
+    for backend in backends:
+        b = batch if backend != "pallas" or jax.default_backend() == "tpu" else min(batch, 4096)
+        src, dst, w = _stream(b)
+        fn = jax.jit(
+            lambda s, a, d_, w_, bk=backend: s.update(a, d_, w_, backend=bk)
+        )
+        iters = 2 if backend == "pallas" else 3
+        us = time_fn(fn, sk, src, dst, w, iters=iters)
+        eps = b / (us / 1e6)
+        out[backend] = eps
+        extra = (
+            {"note": "interpret-mode correctness path on CPU host"}
+            if backend == "pallas" and jax.default_backend() != "tpu"
+            else {}
+        )
+        record(
+            f"ingest_backend_{backend}", us / b, batch=b,
+            edges_per_s=round(eps), **extra,
+        )
+    return out
 
 
 def run():
     cfg = SketchConfig(depth=4, width_rows=1024, width_cols=1024)
     sk = GLavaSketch.empty(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
     b = 32768
-    src = jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32)
-    dst = jnp.asarray(rng.integers(0, 1 << 20, b), jnp.uint32)
-    w = jnp.asarray(rng.integers(1, 5, b), jnp.float32)
+    src, dst, w = _stream(b)
 
     seq = jax.jit(lambda s, a, d_, w_: s.update_sequential(a[:256], d_[:256], w_[:256]))
     us = time_fn(seq, sk, src, dst, w, iters=3)
-    record("ingest_sequential_paper_literal", us / 256, batch=256)
+    record("ingest_sequential_paper_literal", us / 256, batch=256,
+           edges_per_s=round(256 / (us / 1e6)))
 
-    scat = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="scatter"))
-    us = time_fn(scat, sk, src, dst, w)
-    record("ingest_scatter_vectorized", us / b, batch=b)
-
-    oneh = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="onehot"))
-    us = time_fn(oneh, sk, src, dst, w, iters=3)
-    record("ingest_onehot_mxu_formulation", us / b, batch=b)
-
-    pal = jax.jit(lambda s, a, d_, w_: s.update(a[:4096], d_[:4096], w_[:4096], backend="pallas"))
-    us = time_fn(pal, sk, src, dst, w, iters=2)
-    record("ingest_pallas_interpret", us / 4096, batch=4096,
-           note="interpret-mode correctness path on CPU host")
+    # one engine dispatch point, every backend (the trajectory's per-backend
+    # edges/sec record)
+    backend_sweep(batch=b)
 
     # O(1)-per-edge invariant: per-edge cost must not grow with sketch fill
+    scat = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="scatter"))
     filled = sk.update(src, dst, w)
     us_empty = time_fn(scat, sk, src, dst, w)
     us_full = time_fn(scat, filled, src, dst, w)
@@ -52,5 +93,19 @@ def run():
     record("construction_linearity", t2 / b, half_over_full=round(t1 / t2, 2))
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=list(BACKENDS) + ["all"], default="all",
+                    help="ingest backend to time (default: sweep all)")
+    ap.add_argument("--batch", type=int, default=32768)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--width", type=int, default=1024)
+    args = ap.parse_args()
+    backends = BACKENDS if args.backend == "all" else (args.backend,)
+    eps = backend_sweep(backends, args.batch, args.depth, args.width)
+    for k, v in eps.items():
+        print(f"{k}: {v:,.0f} edges/s")
+
+
 if __name__ == "__main__":
-    run()
+    main()

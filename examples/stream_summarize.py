@@ -57,7 +57,7 @@ def main():
         server.reachable(qs[:32], qd[:32])
 
     wall = time.time() - t_start
-    st = server.stats.summary()
+    st = server.summary()
     # exact per-edge counters for this stream would need one counter per
     # DISTINCT edge and keep GROWING with the stream; the sketch is constant.
     n_distinct = len(exact_edges)

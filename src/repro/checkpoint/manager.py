@@ -129,7 +129,9 @@ class CheckpointManager:
         ShapeDtypeStructs) provides the treedef; ``shardings`` (optional
         matching pytree of NamedShardings) re-lays-out every leaf for the
         CURRENT mesh — the elastic-scaling reshard path.
-        Returns (state, metadata)."""
+        Returns (state, metadata); ``metadata["step"]`` is always present,
+        backed by the manifest's own step counter (callers never see None
+        for the restored step)."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -157,4 +159,8 @@ class CheckpointManager:
             else:
                 leaves.append(jax.device_put(arr))
         state = jax.tree_util.tree_unflatten(treedef, leaves)
-        return state, manifest["metadata"]
+        metadata = dict(manifest["metadata"])
+        # The manifest step is authoritative; caller metadata may omit it.
+        if metadata.get("step") is None:
+            metadata["step"] = manifest["step"]
+        return state, metadata

@@ -10,6 +10,7 @@ from repro.core.hashing import (
     mulmod31,
     sign_hash,
 )
+from repro.core.ingest import IngestEngine, ingest, resolve_backend
 from repro.core.sketch import (
     CountMin,
     CountSketch,
@@ -32,6 +33,9 @@ __all__ = [
     "mix_keys",
     "mulmod31",
     "sign_hash",
+    "IngestEngine",
+    "ingest",
+    "resolve_backend",
     "CountMin",
     "CountSketch",
     "GLavaSketch",

@@ -19,32 +19,15 @@ psum-combine masked partials.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.ingest import ingest
 from repro.core.sketch import GLavaSketch
-
-
-def _row_shard_ingest(counters_shard, r, c, weights, *, wr_shard, model_axis):
-    """Per-device body: accumulate the rows this model-shard owns, then merge
-    stream shards.  counters_shard: (d, wr/TP, wc); r/c: (d, B_local)."""
-    my_idx = jax.lax.axis_index(model_axis)
-    row_lo = my_idx * wr_shard
-    local_r = r - row_lo
-    in_shard = (local_r >= 0) & (local_r < wr_shard)
-    # One-hot over the LOCAL row range; out-of-shard rows hit the zero row.
-    oh_r = jax.nn.one_hot(
-        jnp.where(in_shard, local_r, wr_shard), wr_shard + 1, dtype=jnp.float32
-    )[..., :wr_shard]
-    wc = counters_shard.shape[-1]
-    oh_c = jax.nn.one_hot(c, wc, dtype=jnp.float32) * weights[None, :, None]
-    upd = jnp.einsum("dbr,dbc->drc", oh_r, oh_c)
-    return counters_shard + upd
+from repro.distributed.compat import shard_map
 
 
 def distributed_ingest(
@@ -56,10 +39,16 @@ def distributed_ingest(
     *,
     stream_axes: Sequence[str] = ("data",),
     model_axis: str = "model",
+    backend: str = "onehot",
 ) -> GLavaSketch:
     """Ingest a GLOBAL edge batch, sharded over `stream_axes`, into a sketch
     whose rows are sharded over `model_axis`.  Returns the updated sketch
-    with the same shardings."""
+    with the same shardings.
+
+    Per-device accumulation goes through the same :mod:`repro.core.ingest`
+    dispatch as local ingest (``row_offset`` masks out-of-shard rows), so
+    the distributed result is bit-identical to the local oracle for
+    integer weights — the engine's exact-equivalence contract."""
     if weights is None:
         weights = jnp.ones(src.shape, jnp.float32)
     weights = weights.astype(jnp.float32)
@@ -71,15 +60,14 @@ def distributed_ingest(
     stream_spec = P(None, tuple(stream_axes))  # (d, B) sharded on batch
 
     def body(counters_shard, r, c, w):
-        upd = _row_shard_ingest(
-            counters_shard, r, c, w, wr_shard=wr_shard, model_axis=model_axis
-        )
+        row_lo = jax.lax.axis_index(model_axis) * wr_shard
+        upd = ingest(counters_shard, r, c, w, backend=backend, row_offset=row_lo)
         # Merge stream shards: the paper's distributed merge-by-add.
         delta = upd - counters_shard
         delta = jax.lax.psum(delta, tuple(stream_axes))
         return counters_shard + delta
 
-    counters = jax.shard_map(
+    counters = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -119,7 +107,7 @@ def distributed_edge_query(
         vals = jax.lax.pmin(vals, model_axis)  # (d, Q) now replicated
         return jnp.min(vals, axis=0)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(None, model_axis, None), P(), P()),
@@ -151,7 +139,7 @@ def distributed_point_query(
             vals = jnp.take_along_axis(col_sums, h, axis=1)
             return jnp.min(vals, axis=0)
 
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(P(None, model_axis, None), P()),
@@ -172,7 +160,7 @@ def distributed_point_query(
             vals = jax.lax.pmin(vals, model_axis)
             return jnp.min(vals, axis=0)
 
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(P(None, model_axis, None), P()),

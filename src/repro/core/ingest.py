@@ -1,0 +1,197 @@
+"""IngestEngine — the ONE dispatch point for sketch ingest.
+
+Every path that folds an edge batch into gLava counters (local update,
+sliding-window slices, the serving engine, the row-sharded distributed
+plane, and the Pallas kernel wrapper) routes through :func:`ingest` /
+:class:`IngestEngine`.  The engine owns the hash-bucket scatter semantics,
+the padding/chunking bookkeeping, and the row-shard masking, so backends
+cannot drift apart.
+
+Exact-equivalence contract
+--------------------------
+For integer-valued fp32 weights with total per-cell mass below ``2**24``,
+all backends — and any row-sharded decomposition of them — produce
+BIT-IDENTICAL counters:
+
+    ingest(C, r, c, w, backend=B1)
+      == ingest(C, r, c, w, backend=B2)                       (any B1, B2)
+      == sum over shards of ingest(C_shard, r, c, w, row_offset=k*wr_shard)
+
+because fp32 addition of exactly-representable integers is associative in
+the reachable range, and out-of-shard edges contribute exactly zero (index
+masking, never weight rounding).  ``repro.core.distributed`` relies on this
+for its psum merge; tests assert it for square and non-square configs.
+
+Ingest-backend selection
+------------------------
+``scatter``  The paper-faithful semantics: ``M[h(x), h(y)] += w`` as one
+             vectorized scatter-add.  Best on CPU/GPU and the reference
+             oracle everywhere.
+``onehot``   The MXU formulation: per edge chunk of size ``chunk``,
+             ``M += OneHot(r)^T @ (OneHot(c) * w)`` — a systolic matmul.
+             Best for XLA:TPU without Pallas.
+``pallas``   The Pallas TPU kernel implementing the one-hot formulation
+             with explicit VMEM tiling (``repro.kernels.ingest``).  The
+             fast path on TPU hardware; on CPU hosts it runs in interpret
+             mode (a correctness artifact, not a perf claim).
+``auto``     Resolves via the ``REPRO_INGEST_BACKEND`` environment
+             variable if set, else ``pallas`` on TPU backends and
+             ``scatter`` elsewhere.
+
+Row-sharded ingest (``row_offset``/``num_rows_total``) shifts global row
+ids into shard-local coordinates and masks out-of-shard edges; every
+backend supports it, so the distributed plane can use the same fast path
+as a single device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 2048
+BACKENDS = ("scatter", "onehot", "pallas")
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Resolve "auto"/None to a concrete backend name."""
+    if backend in (None, "auto"):
+        env = os.environ.get("REPRO_INGEST_BACKEND", "").strip().lower()
+        if env:
+            backend = env
+        else:
+            backend = (
+                "pallas" if jax.default_backend() == "tpu" else "scatter"
+            )
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown ingest backend: {backend!r} (want {BACKENDS})")
+    return backend
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
+    """Right-pad ``axis`` to the next multiple (shared by kernel wrappers)."""
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# backends — all take shard-LOCAL row ids plus the in-shard mask
+# ---------------------------------------------------------------------------
+
+
+def _scatter(counters, local_r, cols, weights, in_shard, chunk):
+    d = counters.shape[0]
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], local_r.shape)
+    w = jnp.where(in_shard, jnp.broadcast_to(weights[None, :], local_r.shape), 0.0)
+    safe_r = jnp.where(in_shard, local_r, 0)
+    return counters.at[d_idx, safe_r, cols].add(w)
+
+
+def _onehot(counters, local_r, cols, weights, in_shard, chunk):
+    d, wr, wc = counters.shape
+    batch = local_r.shape[1]
+    chunk = min(chunk, batch)
+    # Out-of-shard rows hit the sentinel one-hot class, sliced away below —
+    # masking by INDEX, so weights stay untouched (exactness contract).
+    r_sent = jnp.where(in_shard, local_r, wr)
+
+    def one_chunk(counters, args):
+        rc, cc, wchunk = args  # (d, C), (d, C), (C,)
+        oh_r = jax.nn.one_hot(rc, wr + 1, dtype=jnp.float32)[..., :wr]  # (d, C, wr)
+        oh_c = jax.nn.one_hot(cc, wc, dtype=jnp.float32)                # (d, C, wc)
+        oh_c = oh_c * wchunk[None, :, None]
+        return counters + jnp.einsum("dbr,dbc->drc", oh_r, oh_c), None
+
+    n_full = batch // chunk
+    if n_full:
+        rs = r_sent[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
+        cs = cols[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
+        ws = weights[: n_full * chunk].reshape(n_full, chunk)
+        counters, _ = jax.lax.scan(one_chunk, counters, (rs, cs, ws))
+    if batch - n_full * chunk:
+        counters, _ = one_chunk(
+            counters,
+            (
+                r_sent[:, n_full * chunk :],
+                cols[:, n_full * chunk :],
+                weights[n_full * chunk :],
+            ),
+        )
+    return counters
+
+
+def _pallas(counters, local_r, cols, weights, in_shard, chunk):
+    from repro.kernels.ingest.kernel import CHUNK_B, TILE_C, TILE_R, ingest_pallas
+
+    d, wr, wc = counters.shape
+    # Out-of-shard rows become -1: the kernel's iota compare matches nothing.
+    r = jnp.where(in_shard, local_r, -1).astype(jnp.int32)
+    cp = pad_to(pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
+    rp = pad_to(r, CHUNK_B, 1, value=-1)
+    cl = pad_to(cols.astype(jnp.int32), CHUNK_B, 1)
+    wp = pad_to(weights, CHUNK_B, 0)  # padded edges carry weight 0
+    out = ingest_pallas(cp, rp, cl, wp, interpret=jax.default_backend() != "tpu")
+    return out[:, :wr, :wc]
+
+
+_BACKEND_FNS = {"scatter": _scatter, "onehot": _onehot, "pallas": _pallas}
+
+
+# ---------------------------------------------------------------------------
+# the dispatch point
+# ---------------------------------------------------------------------------
+
+
+def ingest(
+    counters: jax.Array,   # (d, wr_local, wc) fp32
+    rows: jax.Array,       # (d, B) int — GLOBAL row buckets
+    cols: jax.Array,       # (d, B) int — column buckets
+    weights: jax.Array,    # (B,) fp32
+    *,
+    backend: str = "scatter",
+    chunk: int = DEFAULT_CHUNK,
+    row_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Fold one hashed edge batch into ``counters`` (see module docstring).
+
+    ``row_offset`` is the global row id of this counter shard's row 0; rows
+    outside ``[row_offset, row_offset + wr_local)`` contribute exactly
+    nothing.  ``row_offset=0`` with full-width counters is plain local
+    ingest (the mask is all-true and free after fusion).
+    """
+    backend = resolve_backend(backend)
+    wr_local = counters.shape[1]
+    local_r = rows.astype(jnp.int32) - jnp.asarray(row_offset, jnp.int32)
+    in_shard = (local_r >= 0) & (local_r < wr_local)
+    cols = cols.astype(jnp.int32)
+    weights = weights.astype(jnp.float32)
+    return _BACKEND_FNS[backend](counters, local_r, cols, weights, in_shard, chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestEngine:
+    """A resolved (backend, chunk) pair with the `ingest` dispatch bound."""
+
+    backend: str = "scatter"
+    chunk: int = DEFAULT_CHUNK
+
+    def __post_init__(self):
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
+
+    def __call__(self, counters, rows, cols, weights, row_offset=0):
+        return ingest(
+            counters,
+            rows,
+            cols,
+            weights,
+            backend=self.backend,
+            chunk=self.chunk,
+            row_offset=row_offset,
+        )

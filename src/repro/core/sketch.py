@@ -9,24 +9,17 @@ probability at equal space.
 
 Ingest backends
 ---------------
-``scatter``  the paper-faithful semantics: ``M[h(x), h(y)] += w`` per edge,
-             expressed as one vectorized scatter-add (bit-identical to the
-             sequential loop because ``sum`` is associative/commutative and
-             fp32 adds of integer-valued counters < 2**24 are exact).
-``onehot``   the TPU-native adaptation: for an edge chunk of size B,
-             ``M += OneHot(r)^T @ (OneHot(c) * w)`` — an MXU matmul instead
-             of a scatter (see DESIGN.md Section 2).
-``pallas``   the Pallas kernel implementing the one-hot formulation with
-             explicit VMEM tiling (``repro.kernels.ingest``).
-
-All three agree exactly for integer-valued weights (tested).  Sketches are
-*linear*: ``sketch(S1 + S2) = sketch(S1) + sketch(S2)`` — the property the
-paper's distributed setting (Section 6.3) and our ``psum`` merge rely on.
+All ingest goes through :mod:`repro.core.ingest` (the ``IngestEngine``
+single dispatch point), which owns the ``scatter`` / ``onehot`` / ``pallas``
+backends, their padding/chunking, and the row-shard masking used by the
+distributed plane.  All backends agree exactly for integer-valued weights
+(tested).  Sketches are *linear*: ``sketch(S1 + S2) = sketch(S1) +
+sketch(S2)`` — the property the paper's distributed setting (Section 6.3)
+and our ``psum`` merge rely on.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -38,8 +31,7 @@ from repro.core.hashing import (
     make_hash_family,
     mix_keys,
 )
-
-DEFAULT_CHUNK = 2048
+from repro.core.ingest import DEFAULT_CHUNK, IngestEngine, ingest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,29 +113,14 @@ class GLavaSketch:
         if weights is None:
             weights = jnp.ones(src.shape, jnp.float32)
         weights = weights.astype(jnp.float32)
+        engine = IngestEngine(backend, chunk)
         r, c = self.hash_edges(src, dst)
-        if backend == "scatter":
-            counters = _ingest_scatter(self.counters, r, c, weights)
-        elif backend == "onehot":
-            counters = _ingest_onehot(self.counters, r, c, weights, chunk)
-        elif backend == "pallas":
-            from repro.kernels.ingest import ops as ingest_ops
-
-            counters = ingest_ops.sketch_ingest(self.counters, r, c, weights)
-        else:
-            raise ValueError(f"unknown ingest backend: {backend}")
+        counters = engine(self.counters, r, c, weights)
         if not self.config.directed:
             # Undirected: also accumulate the mirrored edge so the adjacency
             # matrix stays symmetric (paper Section 6.1.1).
             r2, c2 = self.hash_edges(dst, src)
-            if backend == "scatter":
-                counters = _ingest_scatter(counters, r2, c2, weights)
-            elif backend == "onehot":
-                counters = _ingest_onehot(counters, r2, c2, weights, chunk)
-            else:
-                from repro.kernels.ingest import ops as ingest_ops
-
-                counters = ingest_ops.sketch_ingest(counters, r2, c2, weights)
+            counters = engine(counters, r2, c2, weights)
         return dataclasses.replace(self, counters=counters)
 
     def delete(self, src, dst, weights=None, backend: str = "scatter"):
@@ -170,11 +147,9 @@ class GLavaSketch:
         counters, _ = jax.lax.scan(body, self.counters, (r.T, c.T, weights))
         out = dataclasses.replace(self, counters=counters)
         if not self.config.directed:
+            r2, c2 = self.hash_edges(dst, src)
             out = dataclasses.replace(
-                out,
-                counters=_ingest_scatter(
-                    out.counters, *self.hash_edges(dst, src), weights
-                ),
+                out, counters=ingest(out.counters, r2, c2, weights)
             )
         return out
 
@@ -215,47 +190,6 @@ class GLavaSketch:
             and np.array_equal(np.asarray(self.col_hash.a), np.asarray(other.col_hash.a))
             and np.array_equal(np.asarray(self.col_hash.b), np.asarray(other.col_hash.b))
         )
-
-
-# ---------------------------------------------------------------------------
-# ingest implementations
-# ---------------------------------------------------------------------------
-
-
-def _ingest_scatter(counters, r, c, weights):
-    """Vectorized scatter-add of an edge batch into all d sketches."""
-    d = counters.shape[0]
-    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], r.shape)
-    w = jnp.broadcast_to(weights[None, :], r.shape)
-    return counters.at[d_idx, r, c].add(w)
-
-
-def _ingest_onehot(counters, r, c, weights, chunk: int = DEFAULT_CHUNK):
-    """MXU formulation: M_i += OneHot(r_i)^T @ (OneHot(c_i) * w), chunked."""
-    d, wr, wc = counters.shape
-    batch = r.shape[1]
-    chunk = min(chunk, batch)
-
-    def one_chunk(counters, args):
-        rc, cc, wchunk = args  # (d, C), (d, C), (C,)
-        oh_r = jax.nn.one_hot(rc, wr, dtype=jnp.float32)          # (d, C, wr)
-        oh_c = jax.nn.one_hot(cc, wc, dtype=jnp.float32)          # (d, C, wc)
-        oh_c = oh_c * wchunk[None, :, None]
-        upd = jnp.einsum("dbr,dbc->drc", oh_r, oh_c)
-        return counters + upd, None
-
-    n_full = batch // chunk
-    if n_full:
-        rs = r[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
-        cs = c[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
-        ws = weights[: n_full * chunk].reshape(n_full, chunk)
-        counters, _ = jax.lax.scan(one_chunk, counters, (rs, cs, ws))
-    rem = batch - n_full * chunk
-    if rem:
-        counters, _ = one_chunk(
-            counters, (r[:, n_full * chunk :], c[:, n_full * chunk :], weights[n_full * chunk :])
-        )
-    return counters
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,50 @@
+"""Version-portable ``shard_map``.
+
+``jax.shard_map`` (with ``check_vma``) only exists on newer JAX; older
+releases (including the pinned 0.4.x toolchain) expose it as
+``jax.experimental.shard_map.shard_map`` with the ``check_rep`` keyword.
+Every shard_map call site in this repo goes through this wrapper so the
+distributed plane runs unchanged on both.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+try:  # newer JAX: top-level export
+    _shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The replication-check kwarg was renamed check_rep -> check_vma after the
+# top-level export appeared, so probe the signature rather than the attr:
+# 0.6.x-era jax.shard_map still takes check_rep.
+try:
+    _CHECK_KW = (
+        "check_vma"
+        if "check_vma" in inspect.signature(_shard_map).parameters
+        else "check_rep"
+    )
+except (TypeError, ValueError):  # signature not introspectable
+    _CHECK_KW = "check_vma"
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag (both gate the
+    same replication/varying-axis static check).
+    """
+    kwargs = {_CHECK_KW: check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

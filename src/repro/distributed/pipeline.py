@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,
@@ -73,7 +75,7 @@ def pipeline_apply(
         return jax.lax.psum(out_acc, axis)
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(pspec, P()),

@@ -128,3 +128,21 @@ def resolve_tree(
 def like_tree(logical_leaf_fn, tree) -> Any:
     """Build a logical tree by mapping a fn over the leaves of `tree`."""
     return jax.tree.map(logical_leaf_fn, tree)
+
+
+def sketch_plane_shardings(
+    mesh: Mesh,
+    *,
+    model_axis: str = "model",
+    stream_axes: Optional[Tuple[str, ...]] = None,
+) -> Tuple[NamedSharding, NamedSharding]:
+    """Canonical placement for the distributed sketch plane (paper §6.3):
+    returns ``(counter_sharding, stream_sharding)`` — counters row-sharded
+    over the model axis, the edge stream sharded over the data axes.  Used
+    by ``repro.core.distributed`` callers and tests so every entry point
+    places the plane identically."""
+    if stream_axes is None:
+        stream_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    counter_sh = NamedSharding(mesh, P(None, model_axis, None))
+    stream_sh = NamedSharding(mesh, P(stream_axes))
+    return counter_sh, stream_sh

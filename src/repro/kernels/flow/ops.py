@@ -4,22 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.ingest import pad_to
 from repro.kernels.flow.kernel import TILE_C, TILE_R, flows_pallas
-
-
-def _pad_to(x, m, axis):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def flows(counters, interpret: bool = True):
     """(d, wr, wc) -> (row_sums (d, wr), col_sums (d, wc))."""
     d, wr, wc = counters.shape
-    cp = _pad_to(_pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
+    cp = pad_to(pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
     rs, cs = flows_pallas(cp, interpret=interpret)
     return rs[:, :wr], cs[:, :wc]
 

@@ -1,30 +1,17 @@
-"""jit'd wrapper: pads to kernel tile sizes, invokes the Pallas ingest
-kernel, unpads.  Padded edges carry weight 0 into row/col 0 — a no-op by
-linearity."""
+"""jit'd wrapper around the Pallas ingest kernel.
+
+Padding/unpadding and index masking live in ``repro.core.ingest`` (the one
+dispatch point for every ingest backend); this module keeps the historical
+``sketch_ingest`` entry point for kernel benchmarks and tests.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.ingest.kernel import CHUNK_B, TILE_C, TILE_R, ingest_pallas
+from repro.core.ingest import ingest
 
 
-def _pad_to(x, m, axis, value=0):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
-def sketch_ingest(counters, rows, cols, weights, interpret: bool = True):
+def sketch_ingest(counters, rows, cols, weights):
     """counters (d, wr, wc) f32 += scatter(rows, cols, weights).  Any shapes;
-    equals ref.sketch_ingest_ref exactly for integer-valued weights."""
-    d, wr, wc = counters.shape
-    cp = _pad_to(_pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
-    rp = _pad_to(rows.astype(jnp.int32), CHUNK_B, 1)
-    cl = _pad_to(cols.astype(jnp.int32), CHUNK_B, 1)
-    wp = _pad_to(weights.astype(jnp.float32), CHUNK_B, 0)  # pad weight = 0
-    out = ingest_pallas(cp, rp, cl, wp, interpret=interpret)
-    return out[:, :wr, :wc]
+    equals ref.sketch_ingest_ref exactly for integer-valued weights.
+    Interpret-vs-compiled is resolved centrally from the platform by the
+    engine (interpret off TPU)."""
+    return ingest(counters, rows, cols, weights, backend="pallas")

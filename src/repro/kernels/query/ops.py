@@ -4,25 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.ingest import pad_to
 from repro.kernels.query.kernel import CHUNK_Q, TILE_C, TILE_R, query_pallas
-
-
-def _pad_to(x, m, axis, value=0):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
 
 
 def edge_query_cells(counters, rows, cols, interpret: bool = True):
     """Per-sketch cell values (d, Q) — matches ref.edge_query_ref exactly."""
     d, wr, wc = counters.shape
     q = rows.shape[1]
-    cp = _pad_to(_pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
-    rp = _pad_to(rows.astype(jnp.int32), CHUNK_Q, 1)
-    cl = _pad_to(cols.astype(jnp.int32), CHUNK_Q, 1)
+    cp = pad_to(pad_to(counters.astype(jnp.float32), TILE_R, 1), TILE_C, 2)
+    rp = pad_to(rows.astype(jnp.int32), CHUNK_Q, 1)
+    cl = pad_to(cols.astype(jnp.int32), CHUNK_Q, 1)
     out = query_pallas(cp, rp, cl, interpret=interpret)
     return out[:, :q]
 

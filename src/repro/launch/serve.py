@@ -7,6 +7,7 @@ import argparse
 
 import numpy as np
 
+from repro.core.ingest import BACKENDS
 from repro.core.sketch import SketchConfig
 from repro.data.graphs import edge_stream
 from repro.serve.engine import SketchServer
@@ -20,10 +21,20 @@ def main():
     ap.add_argument("--edges", type=int, default=500_000)
     ap.add_argument("--batch", type=int, default=50_000)
     ap.add_argument("--window-slices", type=int, default=0)
+    ap.add_argument(
+        "--ingest-backend",
+        default="auto",
+        choices=["auto", *BACKENDS],
+        help="auto = pallas on TPU, scatter elsewhere (REPRO_INGEST_BACKEND overrides)",
+    )
     args = ap.parse_args()
 
     cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
-    server = SketchServer(cfg, window_slices=args.window_slices or None)
+    server = SketchServer(
+        cfg,
+        window_slices=args.window_slices or None,
+        ingest_backend=args.ingest_backend,
+    )
     rng = np.random.default_rng(0)
     stream = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
 
@@ -39,7 +50,7 @@ def main():
         server.in_flow(qs[:256])
         server.reachable(qs[:64], qd[:64])
 
-    stats = server.stats.summary()
+    stats = server.summary()
     print("[serve] " + " ".join(f"{k}={v:,.1f}" for k, v in stats.items()))
 
 

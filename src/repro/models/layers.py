@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.compat import shard_map
+
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -276,7 +278,7 @@ def swa_attention_halo(
         return out.transpose(1, 0, 4, 2, 3, 5).reshape(b_loc, s_loc, hq, dh)
 
     spec = P(dp, "model", None, None)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
         check_vma=False,
     )(q, k, v)
@@ -521,7 +523,7 @@ def moe_ffn_sharded(
         wspec_dn = P(None, "model", dp)
 
     act_spec = P(dp, "model", None)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(act_spec, P(None, None), wspec_in, wspec_in, wspec_dn),

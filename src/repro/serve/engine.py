@@ -1,6 +1,12 @@
 """gLava serving engine: the paper's data structure as an online service.
 
-Ingest path: batched edge updates (one jitted call per batch, O(1)/edge).
+Ingest path: batched edge updates through the :mod:`repro.core.ingest`
+engine (one jitted call per batch, O(1)/edge), DOUBLE-BUFFERED — the next
+batch is staged on the host and dispatched while the device still
+accumulates the previous one; the server only blocks when the in-flight
+queue exceeds ``max_inflight`` or a query needs the live counters.
+Backend "auto" selects the Pallas fast path on TPU hosts.
+
 Query path: batched estimators over the live sketch; reachability queries
 are served from a cached transitive closure that refreshes lazily after
 ingest (all-pairs closure amortizes over query batches — DESIGN.md
@@ -8,6 +14,7 @@ Section 2).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, Optional
@@ -17,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GLavaSketch, SketchConfig, queries, reach
+from repro.core.ingest import resolve_backend
 from repro.core.window import SlidingWindowSketch
 
 
@@ -45,6 +53,8 @@ class SketchServer:
         seed: int = 0,
         window_slices: Optional[int] = None,
         ingest_backend: str = "scatter",
+        double_buffer: bool = True,
+        max_inflight: int = 2,
     ):
         if window_slices:
             self.window = SlidingWindowSketch.empty(
@@ -54,7 +64,7 @@ class SketchServer:
         else:
             self.window = None
             self.sketch = GLavaSketch.empty(config, jax.random.key(seed))
-        self.backend = ingest_backend
+        self.backend = resolve_backend(ingest_backend)
         self.stats = ServeStats()
         self._closure = None
         self._closure_dirty = True
@@ -62,6 +72,15 @@ class SketchServer:
         self._jit_in = jax.jit(queries.node_in_flow)
         self._jit_out = jax.jit(queries.node_out_flow)
         self._jit_closure = jax.jit(reach.transitive_closure)
+        # double-buffered ingest: JAX dispatch is async, so staging the next
+        # host batch overlaps the device accumulating the previous one; the
+        # deque bounds how many un-materialized updates may be in flight.
+        self._max_inflight = max_inflight if double_buffer else 0
+        self._inflight: collections.deque = collections.deque()
+        backend = self.backend
+        self._jit_update = jax.jit(
+            lambda live, s, d, w: live.update(s, d, w, backend=backend)
+        )
 
     # -- ingest ---------------------------------------------------------------
 
@@ -69,27 +88,54 @@ class SketchServer:
         return self.window.window_sketch() if self.window else self.sketch
 
     def ingest(self, src: np.ndarray, dst: np.ndarray, weights=None):
+        """Dispatch one edge batch; returns as soon as the device accepts it
+        (call :meth:`flush` / any query to synchronize)."""
         t0 = time.time()
         s = jnp.asarray(src, jnp.uint32)
         d = jnp.asarray(dst, jnp.uint32)
-        w = None if weights is None else jnp.asarray(weights, jnp.float32)
+        w = (
+            jnp.ones(s.shape, jnp.float32)
+            if weights is None
+            else jnp.asarray(weights, jnp.float32)
+        )
         if self.window:
-            self.window = self.window.update(s, d, w, backend=self.backend)
+            self.window = self._jit_update(self.window, s, d, w)
+            self._inflight.append(self.window.slices)
         else:
-            self.sketch = self.sketch.update(s, d, w, backend=self.backend)
-        jax.block_until_ready(self._live().counters)
+            self.sketch = self._jit_update(self.sketch, s, d, w)
+            self._inflight.append(self.sketch.counters)
+        while len(self._inflight) > self._max_inflight:
+            jax.block_until_ready(self._inflight.popleft())
         self.stats.edges_ingested += len(src)
         self.stats.ingest_s += time.time() - t0
         self._closure_dirty = True
 
+    def flush(self):
+        """Block until every dispatched ingest batch has landed on device."""
+        if not self._inflight:
+            return
+        t0 = time.time()
+        while self._inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        self.stats.ingest_s += time.time() - t0
+
+    def summary(self) -> Dict[str, float]:
+        """Flushed stats — the only honest read of ingest throughput while
+        ingest is double-buffered (raw ``stats.summary()`` counts dispatch
+        time only for still-in-flight batches)."""
+        self.flush()
+        return self.stats.summary()
+
     def advance_window(self):
         if self.window:
+            self.flush()
             self.window = self.window.advance()
             self._closure_dirty = True
 
     # -- queries --------------------------------------------------------------
 
     def _timed(self, fn, *args):
+        self.flush()
         t0 = time.time()
         out = np.asarray(fn(self._live(), *args))
         self.stats.query_s += time.time() - t0
@@ -111,6 +157,7 @@ class SketchServer:
         return self.in_flow(keys) > theta
 
     def reachable(self, src, dst):
+        self.flush()
         t0 = time.time()
         live = self._live()
         if self._closure_dirty or self._closure is None:
@@ -130,6 +177,7 @@ class SketchServer:
         return out
 
     def subgraph_weight(self, src, dst):
+        self.flush()
         live = self._live()
         t0 = time.time()
         out = float(

@@ -99,6 +99,12 @@ def train_loop(
     for step in range(start_step, cfg.total_steps):
         batch = next(batches)
         if cfg.fail_at_step is not None and step == cfg.fail_at_step:
+            # Simulated preemption: checkpoints initiated on earlier steps
+            # are durable by the time a later step dies (on real pods the
+            # async writer has had many step-times to land; here steps are
+            # microseconds, so join it explicitly before dying).
+            if mgr is not None:
+                mgr.wait()
             raise RuntimeError(f"injected failure at step {step}")
         t0 = time.time()
         state, metrics = jstep(state, jax.tree.map(jnp.asarray, batch))

@@ -1,0 +1,116 @@
+"""Minimal offline stand-in for ``hypothesis``.
+
+The CI container has no network access, so ``pip install hypothesis`` is
+impossible; this shim provides the slice of the API the suite uses
+(``given``, ``settings``, and the ``strategies`` below) with deterministic
+pseudo-random example generation.  ``tests/conftest.py`` installs it into
+``sys.modules["hypothesis"]`` ONLY when the real package is missing — with
+hypothesis installed the suite runs unchanged against the real thing.
+
+Semantics: ``@given`` re-runs the test body ``max_examples`` times with
+freshly drawn kwargs; draw #0 uses every strategy's minimal example so
+boundary cases (``n=1``-style) are always exercised.  No shrinking — the
+failing example's kwargs are attached to the assertion message instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class Strategy:
+    def __init__(self, draw_fn, minimal_fn):
+        self._draw = draw_fn
+        self._minimal = minimal_fn
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+
+def integers(min_value=0, max_value=2**63 - 1) -> Strategy:
+    return Strategy(
+        lambda rng: rng.randint(min_value, max_value), lambda: min_value
+    )
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> Strategy:
+    return Strategy(
+        lambda rng: rng.uniform(min_value, max_value), lambda: min_value
+    )
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, lambda: False)
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: rng.choice(elements), lambda: elements[0])
+
+
+def lists(elements: Strategy, min_size=0, max_size=10) -> Strategy:
+    return Strategy(
+        lambda rng: [
+            elements.draw(rng) for _ in range(rng.randint(min_size, max_size))
+        ],
+        lambda: [elements.minimal() for _ in range(min_size)],
+    )
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value, lambda: value)
+
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already-``given``-wrapped) test."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                if i == 0:
+                    drawn = {k: s.minimal() for k, s in strategy_kwargs.items()}
+                else:
+                    drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **{**fixture_kwargs, **drawn})
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example (shim, run {i}): {drawn}"
+                    ) from e
+
+        # Hide the drawn parameters from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+        )
+        return wrapper
+
+    return deco
+
+
+# `from hypothesis import strategies as st` needs a module-like attribute.
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "sampled_from", "lists", "just"):
+    setattr(strategies, _name, globals()[_name])
