@@ -1,13 +1,26 @@
 """Query-capability benchmarks: reachability precision (Section 4.3),
-subgraph semantics (Section 4.4), throughput per query family."""
+subgraph semantics (Section 4.4), throughput per query family.
+
+CLI (the throughput-sweep mode, also run by CI as a smoke check):
+
+    python -m benchmarks.bench_queries                # full sweep
+    python -m benchmarks.bench_queries --smoke        # small shapes, fast
+
+``run()`` (the trajectory entry point) performs the full sweep so
+results/benchmarks.json records queries/sec per family (edge jnp + fused
+pallas, flow point queries from the registers, reach against the cached
+closure, subgraph) alongside ingest edges/sec.
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import record, time_fn
-from repro.core import GLavaSketch, SketchConfig, queries, reach
+from repro.core import GLavaSketch, QueryEngine, SketchConfig, queries, reach
 
 
 def bench_reachability_precision():
@@ -65,28 +78,78 @@ def bench_subgraph_semantics():
     record("subgraph_zero_propagation", 0.0, holds=zero_sem_ok)
 
 
-def bench_query_throughput():
-    cfg = SketchConfig(4, 1024, 1024)
+def bench_query_throughput(smoke: bool = False):
+    """Queries/sec per family through the QueryEngine dispatch (the serving
+    path): edge on both backends, register-served point queries, reach
+    against the precomputed closure, and subgraph.  Records ``qps`` per
+    family so BENCH_*.json tracks query throughput alongside ingest
+    edges/sec."""
+    width = 256 if smoke else 1024
+    n_edges = 10_000 if smoke else 100_000
+    q = 1024 if smoke else 4096
+    cfg = SketchConfig(4, width, width)
     sk = GLavaSketch.empty(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
-    src = jnp.asarray(rng.integers(0, 100000, 100000), jnp.uint32)
-    dst = jnp.asarray(rng.integers(0, 100000, 100000), jnp.uint32)
+    src = jnp.asarray(rng.integers(0, n_edges, n_edges), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, n_edges, n_edges), jnp.uint32)
     sk = sk.update(src, dst)
-    q = 4096
     qs, qd = src[:q], dst[:q]
-    f_edge = jax.jit(queries.edge_query)
-    us = time_fn(f_edge, sk, qs, qd)
-    record("throughput_edge_query", us / q, batch=q, total_us=round(us, 1))
-    f_in = jax.jit(queries.node_in_flow)
-    us = time_fn(f_in, sk, qs)
-    record("throughput_point_query", us / q, batch=q, total_us=round(us, 1))
-    f_cl = jax.jit(reach.transitive_closure)
-    us = time_fn(f_cl, sk.counters, iters=2)
-    record("throughput_closure_refresh", us, w=1024, d=4,
+
+    # Both backends always run (the smoke's small width keeps interpret-mode
+    # pallas cheap), so CI exercises the fused-kernel dispatch path too.
+    for backend in ("jnp", "pallas"):
+        eng = QueryEngine(backend)
+        interp = backend == "pallas" and jax.default_backend() != "tpu"
+        bq = min(q, 512) if interp else q  # interpret mode is slow; tiny batch
+        us = time_fn(eng.edge, sk, qs[:bq], qd[:bq], iters=2 if interp else 5)
+        extra = {"note": "interpret-mode correctness path on CPU host"} if interp else {}
+        record(f"qps_edge_{backend}", us / bq, batch=bq,
+               qps=round(bq / (us / 1e6), 1), **extra)
+
+    eng = QueryEngine("jnp")
+    for family, fn, args in (
+        ("in_flow", eng.in_flow, (sk, qs)),
+        ("out_flow", eng.out_flow, (sk, qs)),
+    ):
+        us = time_fn(fn, *args)
+        record(f"qps_{family}_registers", us / q, batch=q,
+               qps=round(q / (us / 1e6), 1),
+               note="O(d*Q) gather from maintained flow registers")
+
+    # reach: one closure build (epoch-cached), then queries amortize it
+    us_cl = time_fn(lambda: eng.closure_for(sk, epoch=None), iters=2)
+    record("closure_refresh", us_cl, w=width, d=4,
            note="amortized over all reach queries between refreshes")
+    eng.closure_for(sk, epoch=1)  # warm the cache at a fixed epoch
+    us = time_fn(eng.reach, sk, qs, qd, 1)
+    record("qps_reach_precomputed", us / q, batch=q,
+           qps=round(q / (us / 1e6), 1))
+
+    k = 8
+    us = time_fn(eng.subgraph, sk, qs[:k], qd[:k])
+    record("qps_subgraph", us / k, batch=k, qps=round(k / (us / 1e6), 1))
 
 
-def run():
+def run(smoke: bool = False):
     bench_reachability_precision()
     bench_subgraph_semantics()
-    bench_query_throughput()
+    bench_query_throughput(smoke=smoke)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes and batches, both backends (CI smoke "
+                    "check; pallas runs interpret-mode on CPU but stays "
+                    "cheap at smoke width)")
+    ap.add_argument("--throughput-only", action="store_true",
+                    help="skip the accuracy sections, sweep throughput only")
+    args = ap.parse_args()
+    if args.throughput_only:
+        bench_query_throughput(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -124,11 +124,23 @@ class CheckpointManager:
         step: Optional[int] = None,
         like: Any = None,
         shardings: Any = None,
+        fill_missing: bool = False,
     ):
         """Restore a checkpoint.  ``like`` (a pytree of arrays or
         ShapeDtypeStructs) provides the treedef; ``shardings`` (optional
         matching pytree of NamedShardings) re-lays-out every leaf for the
         CURRENT mesh — the elastic-scaling reshard path.
+
+        ``fill_missing=True`` is the schema-evolution path: leaves present
+        in ``like`` but absent from the checkpoint (e.g. the flow registers
+        of a :class:`~repro.core.sketch.GLavaSketch` saved before registers
+        existed) are filled instead of raising — with NaN for inexact
+        dtypes (a stale read fails LOUDLY instead of silently answering 0)
+        and zeros for integer dtypes — and their paths are listed in
+        ``metadata["filled_leaves"]``.  The caller must recompute them
+        before use (``GLavaSketch.with_counters`` rebuilds registers from
+        counters).
+
         Returns (state, metadata); ``metadata["step"]`` is always present,
         backed by the manifest's own step counter (callers never see None
         for the restored step)."""
@@ -147,11 +159,18 @@ class CheckpointManager:
         flat_sh = None
         if shardings is not None:
             flat_sh = [s for _, s in jax.tree_util.tree_flatten_with_path(shardings)[0]]
+        filled = []
         for i, (kp, ref) in enumerate(flat):
             path = jax.tree_util.keystr(kp)
             if path not in by_path:
-                raise KeyError(f"checkpoint missing leaf {path}")
-            arr = by_path[path]
+                if not (fill_missing and hasattr(ref, "shape")):
+                    raise KeyError(f"checkpoint missing leaf {path}")
+                dtype = np.dtype(ref.dtype if hasattr(ref, "dtype") else np.float32)
+                fill = np.nan if np.issubdtype(dtype, np.inexact) else 0
+                arr = np.full(ref.shape, fill, dtype)
+                filled.append(path)
+            else:
+                arr = by_path[path]
             want_dtype = ref.dtype if hasattr(ref, "dtype") else arr.dtype
             arr = arr.astype(want_dtype)
             if flat_sh is not None:
@@ -160,6 +179,8 @@ class CheckpointManager:
                 leaves.append(jax.device_put(arr))
         state = jax.tree_util.tree_unflatten(treedef, leaves)
         metadata = dict(manifest["metadata"])
+        if filled:
+            metadata["filled_leaves"] = filled
         # The manifest step is authoritative; caller metadata may omit it.
         if metadata.get("step") is None:
             metadata["step"] = manifest["step"]

@@ -22,6 +22,7 @@ from repro.core.sketch import (
 from repro.core import queries
 from repro.core import reach
 from repro.core.window import SlidingWindowSketch
+from repro.core.query_engine import QueryEngine, resolve_query_backend
 
 __all__ = [
     "HashFamily",
@@ -45,4 +46,6 @@ __all__ = [
     "queries",
     "reach",
     "SlidingWindowSketch",
+    "QueryEngine",
+    "resolve_query_backend",
 ]

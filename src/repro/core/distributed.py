@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.ingest import ingest
-from repro.core.sketch import GLavaSketch
+from repro.core.sketch import GLavaSketch, scatter_flows
 from repro.distributed.compat import shard_map
 
 
@@ -78,7 +78,15 @@ def distributed_ingest(
         ),
         out_specs=P(None, model_axis, None),
     )(sketch.counters, r, c, weights)
-    return dataclasses.replace(sketch, counters=counters)
+    # Flow registers are O(d·w) and replicated — maintain them with the
+    # plain global scatter (same add order as local ingest, so the
+    # registers stay bit-identical to the local oracle's).
+    row_flows, col_flows = scatter_flows(
+        sketch.row_flows, sketch.col_flows, r, c, weights
+    )
+    return dataclasses.replace(
+        sketch, counters=counters, row_flows=row_flows, col_flows=col_flows
+    )
 
 
 def distributed_edge_query(
@@ -123,9 +131,22 @@ def distributed_point_query(
     direction: str = "in",
     *,
     model_axis: str = "model",
+    use_registers: bool = True,
 ) -> jax.Array:
-    """f̃_v over a row-sharded sketch.  Out-flow needs only the owner shard's
-    row sum; in-flow column sums span shards → psum of partial column sums."""
+    """f̃_v over a row-sharded sketch.
+
+    Fast path (default): the flow registers are replicated and maintained by
+    :func:`distributed_ingest`, so a point query is an O(d·Q) gather with no
+    collective at all.  ``use_registers=False`` keeps the counter-reduction
+    collective path (owner-shard row sums for out-flow; psum of partial
+    column sums for in-flow) for counters that were mutated outside the
+    sketch API and may carry stale registers."""
+    if use_registers:
+        from repro.core import queries
+
+        if direction == "in":
+            return queries.node_in_flow(sketch, keys)
+        return queries.node_out_flow(sketch, keys)
     d, wr, wc = sketch.counters.shape
     tp = mesh.shape[model_axis]
     wr_shard = wr // tp

@@ -27,11 +27,22 @@ def edge_query(sketch: GLavaSketch, src: jax.Array, dst: jax.Array) -> jax.Array
     vals = sketch.counters[d_idx, r, c]  # (d, Q)
     est = jnp.min(vals, axis=0)
     if not sketch.config.directed:
-        # Undirected ingest doubled every edge (x,y) & (y,x); each direction
-        # carries the full weight, so no correction is needed — but guard the
-        # self-loop double count.
-        est = jnp.where(src == dst, est / 2.0, est)
+        est = undirected_selfloop_correction(est, src, dst)
     return est
+
+
+def undirected_selfloop_correction(est, src, dst):
+    """Undirected ingest doubled every edge (x,y) & (y,x); each direction
+    carries the full weight, so no correction is needed — but guard the
+    self-loop double count.  Self-loop mass is always even (every loop was
+    ingested twice), so integer counters halve exactly; divide in the
+    counter dtype to keep the estimate dtype-stable.  Shared by the jnp and
+    Pallas query backends so the halving cannot drift between them."""
+    if jnp.issubdtype(est.dtype, jnp.floating):
+        half = (est * est.dtype.type(0.5)).astype(est.dtype)
+    else:
+        half = est // jnp.asarray(2, est.dtype)
+    return jnp.where(src == dst, half, est)
 
 
 # ---------------------------------------------------------------------------
@@ -40,18 +51,21 @@ def edge_query(sketch: GLavaSketch, src: jax.Array, dst: jax.Array) -> jax.Array
 
 
 def node_in_flow(sketch: GLavaSketch, keys: jax.Array) -> jax.Array:
-    """f̃_v(a, ←): aggregated weight INTO a-nodes = min_i colsum(M_i[:, h_i(a)])."""
-    col_sums = jnp.sum(sketch.counters, axis=1)  # (d, w_c)
+    """f̃_v(a, ←): aggregated weight INTO a-nodes = min_i colsum(M_i[:, h_i(a)]).
+
+    Served from the maintained ``col_flows`` register — an O(d·Q) gather;
+    the O(d·w_r·w_c) counter tensor is never reduced (DESIGN.md Section 3)."""
     h = sketch.col_hash(keys)                    # (d, Q)
-    vals = jnp.take_along_axis(col_sums, h, axis=1)
+    vals = jnp.take_along_axis(sketch.col_flows, h, axis=1)
     return jnp.min(vals, axis=0)
 
 
 def node_out_flow(sketch: GLavaSketch, keys: jax.Array) -> jax.Array:
-    """f̃_v(a, →): aggregated weight OUT of a-nodes = min_i rowsum(M_i[h_i(a), :])."""
-    row_sums = jnp.sum(sketch.counters, axis=2)  # (d, w_r)
+    """f̃_v(a, →): aggregated weight OUT of a-nodes = min_i rowsum(M_i[h_i(a), :]).
+
+    Served from the maintained ``row_flows`` register (O(d·Q) gather)."""
     h = sketch.row_hash(keys)
-    vals = jnp.take_along_axis(row_sums, h, axis=1)
+    vals = jnp.take_along_axis(sketch.row_flows, h, axis=1)
     return jnp.min(vals, axis=0)
 
 
@@ -133,8 +147,10 @@ def wildcard_edge_query(
     """f̃_e with one wildcard endpoint (paper Section 3.4 extension):
     f̃_e(x, *) = f̃_v(x, →) and f̃_e(*, y) = f̃_v(y, ←)."""
     if src is None and dst is None:
-        # (*, *): total stream weight — exact from any single sketch.
-        return jnp.min(jnp.sum(sketch.counters, axis=(1, 2)))[None]
+        # (*, *): total stream weight — exact from any single sketch; the
+        # row register already holds the per-row marginals, so this is an
+        # O(d·w_r) reduction instead of O(d·w_r·w_c).
+        return jnp.min(jnp.sum(sketch.row_flows, axis=1))[None]
     if dst is None:
         return node_out_flow(sketch, src)
     if src is None:
@@ -188,10 +204,9 @@ def global_triangle_estimate(sketch: GLavaSketch) -> jax.Array:
 def heavy_hitter_buckets(sketch: GLavaSketch, theta: float):
     """Buckets whose in/out flow exceeds θ in ALL d sketches — candidate
     heavy-hitter node sets (superset of true heavy hitters; no false
-    negatives by the CountMin over-estimate property)."""
-    row_sums = jnp.sum(sketch.counters, axis=2)  # (d, w_r) out-flow
-    col_sums = jnp.sum(sketch.counters, axis=1)  # (d, w_c) in-flow
-    return row_sums > theta, col_sums > theta
+    negatives by the CountMin over-estimate property).  Reads the maintained
+    flow registers — no counter reduction."""
+    return sketch.row_flows > theta, sketch.col_flows > theta
 
 
 def check_heavy_keys(sketch: GLavaSketch, keys: jax.Array, theta: float):
@@ -211,7 +226,8 @@ def sketch_pagerank(
     rank = jnp.full((m.shape[0], w), 1.0 / w)
 
     def body(_, rank):
-        leaked = 1.0 - damping * jnp.einsum("dw,dwk->dk", rank, p).sum(-1, keepdims=True)
-        return damping * jnp.einsum("dw,dwk->dk", rank, p) + leaked / w
+        step = jnp.einsum("dw,dwk->dk", rank, p)  # one propagation, reused
+        leaked = 1.0 - damping * step.sum(-1, keepdims=True)
+        return damping * step + leaked / w
 
     return jax.lax.fori_loop(0, iters, body, rank)

@@ -1,0 +1,232 @@
+"""QueryEngine — the ONE dispatch point for sketch queries.
+
+Mirrors :class:`repro.core.ingest.IngestEngine` on the query side: every
+query family (edge, point/flow, heavy-hitter, subgraph, reachability) is
+served through one engine that owns
+
+- the **jit cache**: one persistent ``jax.jit`` callable per (family,
+  backend); jit itself then caches per (shape, dtype), so repeated queries
+  never re-trace — callers like ``SketchServer`` stop paying a trace per
+  freshly-created lambda;
+- **query-batch padding/chunking**: key batches are right-padded to a
+  multiple of ``pad_q`` (and processed in ``chunk``-sized pieces beyond
+  that), so the per-(family, shape) cache stays small no matter how ragged
+  the arriving batch sizes are;
+- the **epoch-tagged closure cache**: reachability needs the transitive
+  closure of the counters — O(w³ log w) to build, O(d·Q) to query.  The
+  engine caches one closure tagged with the caller's *epoch* (any int that
+  changes when the sketch changes, e.g. a count of ingested batches);
+  repeated reach queries within an epoch amortize a single closure build;
+- the **backend convention**: ``jnp`` (pure XLA) or ``pallas`` (the fused
+  multi-query kernel from ``repro.kernels.query`` and the blocked closure
+  kernel from ``repro.kernels.closure``); ``auto`` resolves via the
+  ``REPRO_QUERY_BACKEND`` environment variable, else pallas on TPU and jnp
+  elsewhere — the same convention as ingest.
+
+See DESIGN.md Sections 3–4 for how the engine and the flow registers fit
+together.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queries, reach
+from repro.core.sketch import GLavaSketch
+
+QUERY_BACKENDS = ("jnp", "pallas")
+DEFAULT_PAD_Q = 256
+DEFAULT_CHUNK_Q = 16384
+
+
+def resolve_query_backend(backend: Optional[str]) -> str:
+    """Resolve "auto"/None to a concrete query backend name."""
+    if backend in (None, "auto"):
+        env = os.environ.get("REPRO_QUERY_BACKEND", "").strip().lower()
+        if env:
+            backend = env
+        else:
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in QUERY_BACKENDS:
+        raise ValueError(
+            f"unknown query backend: {backend!r} (want {QUERY_BACKENDS})"
+        )
+    return backend
+
+
+def _pallas_edge_query(sketch: GLavaSketch, src: jax.Array, dst: jax.Array):
+    from repro.kernels.query import ops as query_ops
+
+    est = query_ops.edge_query(
+        sketch, src, dst, interpret=jax.default_backend() != "tpu"
+    )
+    # The kernel computes in fp32; counter values are exact integers there
+    # (counting regime), so the cast back to the counter dtype is lossless
+    # and keeps both backends dtype-identical.
+    est = est.astype(sketch.counters.dtype)
+    if not sketch.config.directed:
+        est = queries.undirected_selfloop_correction(est, src, dst)
+    return est
+
+
+def _pallas_closure(counters: jax.Array):
+    from repro.kernels.closure.ops import transitive_closure
+
+    return transitive_closure(counters)
+
+
+# family -> (jnp fn, pallas fn); point/flow families are O(d·Q) register
+# gathers either way, so both backends share the jnp path.
+_FAMILIES: Dict[str, Tuple[Callable, Callable]] = {
+    "edge": (queries.edge_query, _pallas_edge_query),
+    "in_flow": (queries.node_in_flow, queries.node_in_flow),
+    "out_flow": (queries.node_out_flow, queries.node_out_flow),
+    "flow": (queries.node_flow, queries.node_flow),
+    "heavy": (queries.check_heavy_keys, queries.check_heavy_keys),
+    "subgraph": (queries.subgraph_query, queries.subgraph_query),
+    "subgraph_opt": (queries.subgraph_query_opt, queries.subgraph_query_opt),
+    "reach_pre": (
+        reach.reach_query_precomputed,
+        reach.reach_query_precomputed,
+    ),
+    "closure": (reach.transitive_closure, _pallas_closure),
+}
+
+class QueryEngine:
+    """A resolved query backend with per-family jit caching, query padding,
+    and an epoch-tagged transitive-closure cache."""
+
+    def __init__(
+        self,
+        backend: str = "auto",
+        pad_q: int = DEFAULT_PAD_Q,
+        chunk_q: int = DEFAULT_CHUNK_Q,
+    ):
+        self.backend = resolve_query_backend(backend)
+        self.pad_q = pad_q
+        self.chunk_q = max(chunk_q, pad_q)
+        self._jits: Dict[str, Callable] = {}
+        self._closure: Optional[jax.Array] = None
+        self._closure_epoch: Optional[int] = None
+        self._closure_family: Optional[jax.Array] = None
+        self.closure_refreshes = 0
+
+    # -- jit cache -----------------------------------------------------------
+
+    def _fn(self, family: str) -> Callable:
+        fn = self._jits.get(family)
+        if fn is None:
+            jnp_fn, pallas_fn = _FAMILIES[family]
+            fn = jax.jit(pallas_fn if self.backend == "pallas" else jnp_fn)
+            self._jits[family] = fn
+        return fn
+
+    # -- padding/chunking ----------------------------------------------------
+
+    def _run_padded(
+        self,
+        family: str,
+        sketch_args,
+        keys: Tuple[jax.Array, ...],
+        tail_args: Tuple = (),
+    ):
+        """Run a per-query family over key arrays (each (Q,)): pad Q up to a
+        multiple of pad_q so the jit cache sees few distinct shapes, chunk
+        batches beyond chunk_q, slice the answers back to Q.  ``tail_args``
+        ride along un-padded after the key arrays (e.g. a traced θ)."""
+        fn = self._fn(family)
+        q = keys[0].shape[0]
+        outs = []
+        for lo in range(0, max(q, 1), self.chunk_q):
+            hi = min(q, lo + self.chunk_q)
+            part = [k[lo:hi] for k in keys]
+            n = hi - lo
+            pad = (-n) % self.pad_q
+            if pad:
+                part = [jnp.pad(k, (0, pad)) for k in part]
+            out = fn(*sketch_args, *part, *tail_args)
+            outs.append(
+                jax.tree_util.tree_map(lambda o: o[:n], out)
+                if pad
+                else out
+            )
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *outs
+        )
+
+    # -- query families ------------------------------------------------------
+
+    def edge(self, sketch: GLavaSketch, src, dst):
+        return self._run_padded("edge", (sketch,), (src, dst))
+
+    def in_flow(self, sketch: GLavaSketch, keys):
+        return self._run_padded("in_flow", (sketch,), (keys,))
+
+    def out_flow(self, sketch: GLavaSketch, keys):
+        return self._run_padded("out_flow", (sketch,), (keys,))
+
+    def flow(self, sketch: GLavaSketch, keys):
+        return self._run_padded("flow", (sketch,), (keys,))
+
+    def heavy(self, sketch: GLavaSketch, keys, theta: float):
+        # theta rides along as a traced array so one trace serves all θ.
+        return self._run_padded(
+            "heavy", (sketch,), (keys,), (jnp.asarray(theta, jnp.float32),)
+        )
+
+    def subgraph(self, sketch: GLavaSketch, src, dst, optimized: bool = False):
+        # Subgraph queries reduce over the WHOLE edge set — zero-padding
+        # would change the answer (absent-edge semantics) — so they jit at
+        # their exact (small-k) shape instead of going through _run_padded.
+        family = "subgraph_opt" if optimized else "subgraph"
+        return self._fn(family)(sketch, src, dst)
+
+    # -- reachability + closure cache ----------------------------------------
+
+    def closure_for(
+        self, sketch: GLavaSketch, epoch: Optional[int] = None
+    ) -> jax.Array:
+        """The transitive closure of ``sketch.counters``, rebuilt only when
+        ``epoch`` differs from the cached tag (``None`` always rebuilds).
+
+        The cache is additionally tagged with the sketch's hash-family
+        identity, so one engine serving two different sketch streams can
+        never cross-serve a closure even if their caller-managed epochs
+        collide.  (The hash arrays are stable across ingest and window
+        materialization — unlike the counters, which are fresh per batch —
+        so within one stream the epoch alone decides staleness.)"""
+        if (
+            self._closure is None
+            or epoch is None
+            or epoch != self._closure_epoch
+            or self._closure_family is not sketch.row_hash.a
+        ):
+            self._closure = self._fn("closure")(sketch.counters)
+            self._closure_epoch = epoch
+            self._closure_family = sketch.row_hash.a
+            self.closure_refreshes += 1
+        return self._closure
+
+    def reach(
+        self,
+        sketch: GLavaSketch,
+        src,
+        dst,
+        epoch: Optional[int] = None,
+    ):
+        """Batched r̃(a, b) against the epoch-cached closure: repeated reach
+        queries amortize one O(w³ log w) closure instead of recomputing it
+        per call."""
+        closure = self.closure_for(sketch, epoch)
+        return self._run_padded("reach_pre", (sketch, closure), (src, dst))
+
+    def invalidate(self):
+        """Drop the cached closure (e.g. the sketch object was swapped)."""
+        self._closure = None
+        self._closure_epoch = None
+        self._closure_family = None

@@ -63,15 +63,54 @@ class SketchConfig:
         return SketchConfig(depth=d, width_rows=w, width_cols=w)
 
 
+def scatter_flows(
+    row_flows: jax.Array,  # (d, w_r)
+    col_flows: jax.Array,  # (d, w_c)
+    rows: jax.Array,       # (d, B)
+    cols: jax.Array,       # (d, B)
+    weights: jax.Array,    # (B,)
+):
+    """Fold one hashed edge batch into the flow registers — the SAME
+    scatter-add semantics as counter ingest, restricted to the two 1-D
+    marginals.  For integer-valued weights this bit-matches
+    ``jnp.sum(counters, axis=2)`` / ``axis=1`` of the correspondingly
+    updated counters (fp32 integer addition is order-independent in the
+    exact range — the IngestEngine equivalence contract)."""
+    d_idx = jnp.broadcast_to(jnp.arange(rows.shape[0])[:, None], rows.shape)
+    w = jnp.broadcast_to(weights[None, :], rows.shape).astype(row_flows.dtype)
+    return (
+        row_flows.at[d_idx, rows].add(w),
+        col_flows.at[d_idx, cols].add(w),
+    )
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GLavaSketch:
-    """d graph sketches with per-sketch row/col hash functions (a pytree)."""
+    """d graph sketches with per-sketch row/col hash functions (a pytree).
 
-    counters: jax.Array  # (d, w_r, w_c) float32
+    Alongside the (d, w_r, w_c) counters the sketch maintains two *flow
+    registers* — ``row_flows[i] == sum(counters[i], axis=1)`` (out-flow per
+    row bucket) and ``col_flows[i] == sum(counters[i], axis=0)`` (in-flow
+    per column bucket) — updated by the same scatter that updates the
+    counters.  Point, wildcard, heavy-hitter, and monitor queries read these
+    O(d·w) registers instead of re-reducing the O(d·w_r·w_c) counter tensor
+    (DESIGN.md Section 3)."""
+
+    counters: jax.Array   # (d, w_r, w_c) float32
     row_hash: HashFamily
     col_hash: HashFamily
     config: SketchConfig = dataclasses.field(metadata=dict(static=True))
+    row_flows: jax.Array = None  # (d, w_r) — row sums of counters
+    col_flows: jax.Array = None  # (d, w_c) — col sums of counters
+
+    def __post_init__(self):
+        # Backfill registers when constructed positionally from counters
+        # alone (old call sites / restored checkpoints).
+        if self.row_flows is None:
+            object.__setattr__(self, "row_flows", jnp.sum(self.counters, axis=2))
+        if self.col_flows is None:
+            object.__setattr__(self, "col_flows", jnp.sum(self.counters, axis=1))
 
     @property
     def depth(self) -> int:
@@ -93,7 +132,14 @@ class GLavaSketch:
         counters = jnp.zeros(
             (config.depth, config.width_rows, config.width_cols), jnp.float32
         )
-        return GLavaSketch(counters, row_hash, col_hash, config)
+        return GLavaSketch(
+            counters,
+            row_hash,
+            col_hash,
+            config,
+            jnp.zeros((config.depth, config.width_rows), jnp.float32),
+            jnp.zeros((config.depth, config.width_cols), jnp.float32),
+        )
 
     # -- ingest -------------------------------------------------------------
 
@@ -116,12 +162,20 @@ class GLavaSketch:
         engine = IngestEngine(backend, chunk)
         r, c = self.hash_edges(src, dst)
         counters = engine(self.counters, r, c, weights)
+        row_flows, col_flows = scatter_flows(
+            self.row_flows, self.col_flows, r, c, weights
+        )
         if not self.config.directed:
             # Undirected: also accumulate the mirrored edge so the adjacency
             # matrix stays symmetric (paper Section 6.1.1).
             r2, c2 = self.hash_edges(dst, src)
             counters = engine(counters, r2, c2, weights)
-        return dataclasses.replace(self, counters=counters)
+            row_flows, col_flows = scatter_flows(
+                row_flows, col_flows, r2, c2, weights
+            )
+        return dataclasses.replace(
+            self, counters=counters, row_flows=row_flows, col_flows=col_flows
+        )
 
     def delete(self, src, dst, weights=None, backend: str = "scatter"):
         """Turnstile deletion (paper Section 6.1.1): negative-weight update."""
@@ -145,13 +199,10 @@ class GLavaSketch:
             return counters.at[d_idx, ri, ci].add(wi), None
 
         counters, _ = jax.lax.scan(body, self.counters, (r.T, c.T, weights))
-        out = dataclasses.replace(self, counters=counters)
         if not self.config.directed:
             r2, c2 = self.hash_edges(dst, src)
-            out = dataclasses.replace(
-                out, counters=ingest(out.counters, r2, c2, weights)
-            )
-        return out
+            counters = ingest(counters, r2, c2, weights)
+        return self.with_counters(counters)
 
     def update_conservative(self, src, dst, weights=None) -> "GLavaSketch":
         """Conservative-update (Estan–Varghese) variant — beyond-paper accuracy
@@ -171,17 +222,41 @@ class GLavaSketch:
             return counters.at[d_idx, ri, ci].set(new), None
 
         counters, _ = jax.lax.scan(body, self.counters, (r.T, c.T, weights))
-        return dataclasses.replace(self, counters=counters)
+        # Conservative update is NON-linear (cells move by data-dependent
+        # amounts), so the registers cannot be maintained by the edge
+        # scatter — recompute them from the final counters.
+        return self.with_counters(counters)
 
     # -- linear-sketch algebra ----------------------------------------------
 
+    def with_counters(self, counters: jax.Array) -> "GLavaSketch":
+        """Replace the counter tensor wholesale and recompute the flow
+        registers from it (the safe path for counter-level surgery —
+        non-linear updates, restored checkpoints without registers)."""
+        return dataclasses.replace(
+            self,
+            counters=counters,
+            row_flows=jnp.sum(counters, axis=2),
+            col_flows=jnp.sum(counters, axis=1),
+        )
+
     def merge(self, other: "GLavaSketch") -> "GLavaSketch":
         """Merge two sketches built with the SAME hash family (linearity)."""
-        return dataclasses.replace(self, counters=self.counters + other.counters)
+        return dataclasses.replace(
+            self,
+            counters=self.counters + other.counters,
+            row_flows=self.row_flows + other.row_flows,
+            col_flows=self.col_flows + other.col_flows,
+        )
 
     def scale(self, gamma: float) -> "GLavaSketch":
         """Exponential decay of history (streaming time-window variant)."""
-        return dataclasses.replace(self, counters=self.counters * gamma)
+        return dataclasses.replace(
+            self,
+            counters=self.counters * gamma,
+            row_flows=self.row_flows * gamma,
+            col_flows=self.col_flows * gamma,
+        )
 
     def same_family(self, other: "GLavaSketch") -> bool:
         return bool(

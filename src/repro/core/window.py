@@ -6,6 +6,11 @@ were never stored — that's the point of a sketch), so the standard systems
 realization is a ring of K slice-sketches: slice s covers one time slice;
 the window estimate is the sum of live slices (linearity); expiry subtracts
 a whole slice in O(d·w²) without replaying the stream.
+
+Each slice also carries its flow registers (row/col marginal sums — see
+:class:`repro.core.sketch.GLavaSketch`), so the materialized window sketch
+gets maintained registers by summing the O(d·w) slice registers instead of
+re-reducing the O(d·w²) counters.
 """
 from __future__ import annotations
 
@@ -26,25 +31,45 @@ class SlidingWindowSketch:
     slices: jax.Array        # (K, d, w_r, w_c)
     current: jax.Array       # () int32 — index of the active slice
     template: GLavaSketch    # hash family + config carrier (counters unused)
+    row_flows: jax.Array = None  # (K, d, w_r) per-slice row registers
+    col_flows: jax.Array = None  # (K, d, w_c) per-slice col registers
+
+    def __post_init__(self):
+        if self.row_flows is None:
+            object.__setattr__(self, "row_flows", jnp.sum(self.slices, axis=3))
+        if self.col_flows is None:
+            object.__setattr__(self, "col_flows", jnp.sum(self.slices, axis=2))
 
     @staticmethod
     def empty(config: SketchConfig, n_slices: int, key: jax.Array):
         template = GLavaSketch.empty(config, key)
         slices = jnp.zeros((n_slices,) + template.counters.shape, jnp.float32)
-        return SlidingWindowSketch(slices, jnp.array(0, jnp.int32), template)
+        return SlidingWindowSketch(
+            slices,
+            jnp.array(0, jnp.int32),
+            template,
+            jnp.zeros((n_slices,) + template.row_flows.shape, jnp.float32),
+            jnp.zeros((n_slices,) + template.col_flows.shape, jnp.float32),
+        )
 
     @property
     def n_slices(self) -> int:
         return self.slices.shape[0]
 
     def update(self, src, dst, weights=None, backend: str = "scatter"):
-        """Ingest into the active slice."""
+        """Ingest into the active slice (counters AND its registers)."""
         active = dataclasses.replace(
-            self.template, counters=self.slices[self.current]
+            self.template,
+            counters=self.slices[self.current],
+            row_flows=self.row_flows[self.current],
+            col_flows=self.col_flows[self.current],
         )
         active = active.update(src, dst, weights, backend=backend)
         return dataclasses.replace(
-            self, slices=self.slices.at[self.current].set(active.counters)
+            self,
+            slices=self.slices.at[self.current].set(active.counters),
+            row_flows=self.row_flows.at[self.current].set(active.row_flows),
+            col_flows=self.col_flows.at[self.current].set(active.col_flows),
         )
 
     def advance(self) -> "SlidingWindowSketch":
@@ -55,10 +80,17 @@ class SlidingWindowSketch:
             self,
             current=nxt,
             slices=self.slices.at[nxt].set(0.0),
+            row_flows=self.row_flows.at[nxt].set(0.0),
+            col_flows=self.col_flows.at[nxt].set(0.0),
         )
 
     def window_sketch(self) -> GLavaSketch:
-        """Materialize the whole-window sketch (sum of live slices)."""
+        """Materialize the whole-window sketch (sum of live slices).  The
+        registers come from the summed slice registers — no counter
+        reduction."""
         return dataclasses.replace(
-            self.template, counters=jnp.sum(self.slices, axis=0)
+            self.template,
+            counters=jnp.sum(self.slices, axis=0),
+            row_flows=jnp.sum(self.row_flows, axis=0),
+            col_flows=jnp.sum(self.col_flows, axis=0),
         )

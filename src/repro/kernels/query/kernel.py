@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched sketch edge-queries.
+"""Pallas TPU kernels: batched sketch edge-queries.
 
 Gather ``M[d, r(q), c(q)]`` for a query batch is random access — hostile on
 TPU.  Reformulated per (query-chunk × row-tile × col-tile) as masked one-hot
@@ -7,7 +7,18 @@ contractions on the MXU:
     vals[q] += Σ_ij OneHot_r[q, i] · M_tile[i, j] · OneHot_c[q, j]
              = rowsum( (OneHot_r @ M_tile) ⊙ OneHot_c )
 
-Grid = (d, Q/QB, wr/TR, wc/TC), accumulating over the two tile axes.
+Two variants share the formulation:
+
+``query_pallas``        grid (d, Q/QB, wr/TR, wc/TC); emits the per-sketch
+                        cell values (d, Q) — the Γ merge happens outside.
+``multi_query_pallas``  the FUSED multi-query kernel: grid
+                        (Q/QB, d, wr/TR, wc/TC) with the d axis *inside* —
+                        each query chunk's per-sketch value is accumulated
+                        in a VMEM scratch and folded into a running
+                        min-reduce as each sketch completes, so the whole
+                        f̃_e map/reduce (gather + Γ=min) is one kernel pass
+                        and the (d, Q) intermediate never exists in HBM.
+
 VMEM/program: TR*TC*4 + QB*TR*4 + QB*TC*4 ≈ 1.3 MB.
 """
 from __future__ import annotations
@@ -17,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 TILE_R = 256
 TILE_C = 256
@@ -45,6 +57,65 @@ def _query_kernel(rows_ref, cols_ref, counters_ref, out_ref):
     )                                          # (QB, TC)
     vals = jnp.sum(rm * oh_c, axis=1)          # (QB,)
     out_ref[...] += vals[None]
+
+
+def _multi_query_kernel(rows_ref, cols_ref, counters_ref, out_ref, acc_ref):
+    i_d = pl.program_id(1)
+    i_r = pl.program_id(2)
+    i_c = pl.program_id(3)
+    last_r = pl.num_programs(2) - 1
+    last_c = pl.num_programs(3) - 1
+
+    @pl.when((i_d == 0) & (i_r == 0) & (i_c == 0))
+    def _init_out():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    @pl.when((i_r == 0) & (i_c == 0))
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = rows_ref[0, :]                      # (QB,) — this sketch's buckets
+    cols = cols_ref[0, :]
+    r_local = rows - i_r * TILE_R
+    c_local = cols - i_c * TILE_C
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (CHUNK_Q, TILE_R), 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (CHUNK_Q, TILE_C), 1)
+    oh_r = (iota_r == r_local[:, None]).astype(jnp.float32)
+    oh_c = (iota_c == c_local[:, None]).astype(jnp.float32)
+    m = counters_ref[0]                        # (TR, TC)
+    rm = jax.lax.dot_general(
+        oh_r, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (QB, TC)
+    acc_ref[...] += jnp.sum(rm * oh_c, axis=1)[None]
+
+    # Sketch i_d's cell value is complete once its tile sweep finishes —
+    # fold it into the running Γ (min over sketches) and move to the next d.
+    @pl.when((i_r == last_r) & (i_c == last_c))
+    def _gamma_fold():
+        out_ref[...] = jnp.minimum(out_ref[...], acc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def multi_query_pallas(counters, rows, cols, interpret: bool = True):
+    """Fused f̃_e: (d, wr, wc) counters + (d, Q) buckets -> (Q,) min-merged
+    estimates in ONE pass (gather and Γ-min never materialize (d, Q))."""
+    d, wr, wc = counters.shape
+    q = rows.shape[1]
+    grid = (q // CHUNK_Q, d, wr // TILE_R, wc // TILE_C)
+    out = pl.pallas_call(
+        _multi_query_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CHUNK_Q), lambda j, i, k, l: (i, j)),
+            pl.BlockSpec((1, CHUNK_Q), lambda j, i, k, l: (i, j)),
+            pl.BlockSpec((1, TILE_R, TILE_C), lambda j, i, k, l: (i, k, l)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK_Q), lambda j, i, k, l: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, q), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, CHUNK_Q), jnp.float32)],
+        interpret=interpret,
+    )(rows, cols, counters)
+    return out[0]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -8,3 +8,8 @@ def edge_query_ref(counters, rows, cols):
     d = counters.shape[0]
     d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], rows.shape)
     return counters[d_idx, rows, cols]
+
+
+def edge_query_min_ref(counters, rows, cols):
+    """Oracle for the FUSED multi-query kernel: gather + Γ (min over d)."""
+    return jnp.min(edge_query_ref(counters, rows, cols), axis=0)

@@ -8,6 +8,7 @@ import argparse
 import numpy as np
 
 from repro.core.ingest import BACKENDS
+from repro.core.query_engine import QUERY_BACKENDS
 from repro.core.sketch import SketchConfig
 from repro.data.graphs import edge_stream
 from repro.serve.engine import SketchServer
@@ -27,6 +28,13 @@ def main():
         choices=["auto", *BACKENDS],
         help="auto = pallas on TPU, scatter elsewhere (REPRO_INGEST_BACKEND overrides)",
     )
+    ap.add_argument(
+        "--query-backend",
+        default="auto",
+        choices=["auto", *QUERY_BACKENDS],
+        help="auto = fused pallas multi-query kernel on TPU, jnp elsewhere "
+        "(REPRO_QUERY_BACKEND overrides)",
+    )
     args = ap.parse_args()
 
     cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
@@ -34,6 +42,7 @@ def main():
         cfg,
         window_slices=args.window_slices or None,
         ingest_backend=args.ingest_backend,
+        query_backend=args.query_backend,
     )
     rng = np.random.default_rng(0)
     stream = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)

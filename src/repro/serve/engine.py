@@ -7,10 +7,13 @@ accumulates the previous one; the server only blocks when the in-flight
 queue exceeds ``max_inflight`` or a query needs the live counters.
 Backend "auto" selects the Pallas fast path on TPU hosts.
 
-Query path: batched estimators over the live sketch; reachability queries
-are served from a cached transitive closure that refreshes lazily after
-ingest (all-pairs closure amortizes over query batches — DESIGN.md
-Section 2).
+Query path: every family dispatches through one
+:class:`repro.core.query_engine.QueryEngine` (persistent jit cache, query
+padding, backend "auto" = fused Pallas multi-query kernel on TPU).  Point
+and heavy-hitter queries read the sketch's maintained flow registers
+(O(d·Q) gathers); reachability is served from the engine's epoch-tagged
+transitive closure, which refreshes lazily after ingest so all-pairs
+closure cost amortizes over query batches (DESIGN.md Sections 2-4).
 """
 from __future__ import annotations
 
@@ -23,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GLavaSketch, SketchConfig, queries, reach
+from repro.core import GLavaSketch, SketchConfig
 from repro.core.ingest import resolve_backend
+from repro.core.query_engine import QueryEngine
 from repro.core.window import SlidingWindowSketch
 
 
@@ -53,6 +57,7 @@ class SketchServer:
         seed: int = 0,
         window_slices: Optional[int] = None,
         ingest_backend: str = "scatter",
+        query_backend: str = "auto",
         double_buffer: bool = True,
         max_inflight: int = 2,
     ):
@@ -66,12 +71,10 @@ class SketchServer:
             self.sketch = GLavaSketch.empty(config, jax.random.key(seed))
         self.backend = resolve_backend(ingest_backend)
         self.stats = ServeStats()
-        self._closure = None
-        self._closure_dirty = True
-        self._jit_edge = jax.jit(queries.edge_query)
-        self._jit_in = jax.jit(queries.node_in_flow)
-        self._jit_out = jax.jit(queries.node_out_flow)
-        self._jit_closure = jax.jit(reach.transitive_closure)
+        self.engine = QueryEngine(query_backend)
+        # Sketch epoch: bumped on every mutation; tags the engine's closure
+        # cache so reach queries amortize one closure per quiescent period.
+        self._epoch = 0
         # double-buffered ingest: JAX dispatch is async, so staging the next
         # host batch overlaps the device accumulating the previous one; the
         # deque bounds how many un-materialized updates may be in flight.
@@ -108,7 +111,7 @@ class SketchServer:
             jax.block_until_ready(self._inflight.popleft())
         self.stats.edges_ingested += len(src)
         self.stats.ingest_s += time.time() - t0
-        self._closure_dirty = True
+        self._epoch += 1
 
     def flush(self):
         """Block until every dispatched ingest batch has landed on device."""
@@ -130,7 +133,7 @@ class SketchServer:
         if self.window:
             self.flush()
             self.window = self.window.advance()
-            self._closure_dirty = True
+            self._epoch += 1
 
     # -- queries --------------------------------------------------------------
 
@@ -144,14 +147,16 @@ class SketchServer:
 
     def edge_frequency(self, src, dst):
         return self._timed(
-            self._jit_edge, jnp.asarray(src, jnp.uint32), jnp.asarray(dst, jnp.uint32)
+            self.engine.edge,
+            jnp.asarray(src, jnp.uint32),
+            jnp.asarray(dst, jnp.uint32),
         )
 
     def in_flow(self, keys):
-        return self._timed(self._jit_in, jnp.asarray(keys, jnp.uint32))
+        return self._timed(self.engine.in_flow, jnp.asarray(keys, jnp.uint32))
 
     def out_flow(self, keys):
-        return self._timed(self._jit_out, jnp.asarray(keys, jnp.uint32))
+        return self._timed(self.engine.out_flow, jnp.asarray(keys, jnp.uint32))
 
     def heavy_hitters(self, keys, theta: float):
         return self.in_flow(keys) > theta
@@ -159,30 +164,27 @@ class SketchServer:
     def reachable(self, src, dst):
         self.flush()
         t0 = time.time()
-        live = self._live()
-        if self._closure_dirty or self._closure is None:
-            self._closure = self._jit_closure(live.counters)
-            self._closure_dirty = False
-            self.stats.closure_refreshes += 1
         out = np.asarray(
-            reach.reach_query_precomputed(
-                live,
-                self._closure,
+            self.engine.reach(
+                self._live(),
                 jnp.asarray(src, jnp.uint32),
                 jnp.asarray(dst, jnp.uint32),
+                epoch=self._epoch,
             )
         )
         self.stats.query_s += time.time() - t0
         self.stats.queries_served += len(out)
+        self.stats.closure_refreshes = self.engine.closure_refreshes
         return out
 
     def subgraph_weight(self, src, dst):
         self.flush()
-        live = self._live()
         t0 = time.time()
         out = float(
-            queries.subgraph_query(
-                live, jnp.asarray(src, jnp.uint32), jnp.asarray(dst, jnp.uint32)
+            self.engine.subgraph(
+                self._live(),
+                jnp.asarray(src, jnp.uint32),
+                jnp.asarray(dst, jnp.uint32),
             )
         )
         self.stats.query_s += time.time() - t0

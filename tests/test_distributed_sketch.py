@@ -58,14 +58,23 @@ _SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(np.asarray(est), np.asarray(ref_est))
     print("distributed edge query OK")
 
+    np.testing.assert_array_equal(np.asarray(out.row_flows), np.asarray(ref.row_flows))
+    np.testing.assert_array_equal(np.asarray(out.col_flows), np.asarray(ref.col_flows))
+    print("distributed flow registers bit-match local oracle")
+
     for direction, ref_fn in (
         ("in", queries.node_in_flow),
         ("out", queries.node_out_flow),
     ):
-        pq = distributed_point_query(mesh, out, src[:16], direction)
         ref_pq = ref_fn(ref, src[:16])
+        # registers fast path AND the collective counter-reduction fallback
+        pq = distributed_point_query(mesh, out, src[:16], direction)
         np.testing.assert_allclose(np.asarray(pq), np.asarray(ref_pq))
-    print("distributed point queries OK")
+        pq2 = distributed_point_query(
+            mesh, out, src[:16], direction, use_registers=False
+        )
+        np.testing.assert_allclose(np.asarray(pq2), np.asarray(ref_pq))
+    print("distributed point queries OK (both paths)")
     print("ALL_OK")
     """
 )

@@ -17,8 +17,8 @@ from repro.kernels.flow.ops import flows
 from repro.kernels.flow.ref import flows_ref
 from repro.kernels.ingest.ops import sketch_ingest
 from repro.kernels.ingest.ref import sketch_ingest_ref
-from repro.kernels.query.ops import edge_query_cells
-from repro.kernels.query.ref import edge_query_ref
+from repro.kernels.query.ops import edge_query_cells, edge_query_min
+from repro.kernels.query.ref import edge_query_min_ref, edge_query_ref
 from repro.core import reach as reach_mod
 from repro.train.compression import CompressorConfig, init_compressor, _sketch
 
@@ -67,6 +67,20 @@ def test_query_kernel_matches_ref(d, wr, wc, q):
     np.testing.assert_array_equal(
         np.asarray(edge_query_cells(counters, rows, cols)),
         np.asarray(edge_query_ref(counters, rows, cols)),
+    )
+
+
+@pytest.mark.parametrize(
+    "d,wr,wc,q", [(1, 64, 64, 17), (3, 256, 512, 300), (4, 300, 300, 1024)]
+)
+def test_fused_multi_query_kernel_matches_ref(d, wr, wc, q):
+    """The fused kernel's in-pass Γ (min over d) bit-matches the jnp oracle."""
+    counters = jnp.asarray(RNG.integers(0, 100, (d, wr, wc)), jnp.float32)
+    rows = jnp.asarray(RNG.integers(0, wr, (d, q)), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, wc, (d, q)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(edge_query_min(counters, rows, cols)),
+        np.asarray(edge_query_min_ref(counters, rows, cols)),
     )
 
 

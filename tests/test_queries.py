@@ -45,6 +45,29 @@ def test_edge_query_exact_and_overestimate():
     np.testing.assert_array_equal(est, ex)
 
 
+def test_edge_query_dtype_stability():
+    """The undirected self-loop correction must not promote integer counters
+    to float (est / 2.0 used to)."""
+    import dataclasses
+
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64, directed=False)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    src = jnp.asarray([5, 5, 9], jnp.uint32)
+    dst = jnp.asarray([5, 7, 9], jnp.uint32)  # two self-loops + one edge
+    sk = sk.update(src, dst, jnp.asarray([3, 2, 1], jnp.float32))
+    for dtype in (jnp.float32, jnp.int32):
+        cast = dataclasses.replace(
+            sk,
+            counters=sk.counters.astype(dtype),
+            row_flows=sk.row_flows.astype(dtype),
+            col_flows=sk.col_flows.astype(dtype),
+        )
+        est = queries.edge_query(cast, src, dst)
+        assert est.dtype == dtype, f"promoted to {est.dtype}"
+        # self-loop halving stays exact (loop mass is always even)
+        np.testing.assert_array_equal(np.asarray(est), [3, 2, 1])
+
+
 def test_point_queries_match_exact():
     sk = _fig1_sketch()
     in_b = sum(1 for _, d in EDGES if d == "b")
