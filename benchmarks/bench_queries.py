@@ -1,25 +1,29 @@
 """Query-capability benchmarks: reachability precision (Section 4.3),
-subgraph semantics (Section 4.4), throughput per query family.
+subgraph semantics (Section 4.4), throughput per query family and for
+mixed heterogeneous batches through the `repro.api` planner.
 
 CLI (the throughput-sweep mode, also run by CI as a smoke check):
 
-    python -m benchmarks.bench_queries                # full sweep
-    python -m benchmarks.bench_queries --smoke        # small shapes, fast
+    python -m benchmarks.bench_queries                   # full sweep
+    python -m benchmarks.bench_queries --smoke           # small shapes, fast
+    python -m benchmarks.bench_queries --json out.json   # also dump rows
 
 ``run()`` (the trajectory entry point) performs the full sweep so
 results/benchmarks.json records queries/sec per family (edge jnp + fused
 pallas, flow point queries from the registers, reach against the cached
-closure, subgraph) alongside ingest edges/sec.
+closure, subgraph) AND the mixed-batch planner figure alongside ingest
+edges/sec.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import record, time_fn
+from benchmarks.common import ROWS, record, time_fn
 from repro.core import GLavaSketch, QueryEngine, SketchConfig, queries, reach
 
 
@@ -129,6 +133,51 @@ def bench_query_throughput(smoke: bool = False):
     us = time_fn(eng.subgraph, sk, qs[:k], qd[:k])
     record("qps_subgraph", us / k, batch=k, qps=round(k / (us / 1e6), 1))
 
+    bench_mixed_batch(smoke=smoke)
+
+
+def bench_mixed_batch(smoke: bool = False):
+    """Mixed heterogeneous workload through the `repro.api` plan-and-fuse
+    path: one shuffled QueryBatch spanning edge/flow/heavy/reach/subgraph
+    families, planned into one engine dispatch per family.  Records the
+    aggregate queries/sec the facade serves — the number a caller with the
+    paper's mixed workload (Section 3.4) actually sees."""
+    from repro.api import GraphStream, Query, QueryBatch
+
+    width = 256 if smoke else 1024
+    n_edges = 10_000 if smoke else 100_000
+    q = 256 if smoke else 1024
+    gs = GraphStream.open(
+        SketchConfig(4, width, width), ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, n_edges, n_edges).astype(np.uint32)
+    dst = rng.integers(0, n_edges, n_edges).astype(np.uint32)
+    gs.ingest(src, dst)
+
+    batch = QueryBatch([
+        Query.edge(src[:q], dst[:q]),
+        Query.in_flow(src[:q]),
+        Query.out_flow(dst[:q]),
+        Query.heavy(src[: q // 4], theta=5.0),
+        Query.reach(src[: q // 8], dst[: q // 8]),
+        Query.subgraph(src[:4], dst[:4]),
+        Query.subgraph(src[4:12], dst[4:12]),
+    ])
+    n_queries = sum(qq.n_answers for qq in batch)
+    gs.query(batch)  # warm the jit caches + the epoch-tagged closure
+    us = time_fn(gs.query, batch, iters=5)
+    record(
+        "qps_mixed_batch",
+        us / n_queries,
+        batch=n_queries,
+        families=len(batch.families),
+        qps=round(n_queries / (us / 1e6), 1),
+        note="heterogeneous QueryBatch via repro.api planner, one engine "
+        "dispatch per family",
+    )
+
 
 def run(smoke: bool = False):
     bench_reachability_precision()
@@ -144,11 +193,18 @@ def main():
                     "cheap at smoke width)")
     ap.add_argument("--throughput-only", action="store_true",
                     help="skip the accuracy sections, sweep throughput only")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the recorded rows as JSON (CI uploads "
+                    "the smoke sweep as a build artifact)")
     args = ap.parse_args()
     if args.throughput_only:
         bench_query_throughput(smoke=args.smoke)
     else:
         run(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

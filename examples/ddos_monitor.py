@@ -1,22 +1,19 @@
 """DoS monitoring (the paper's flagship point-query application,
 Section 3.4): watch f̃_v(target, ←) > θ in real time over a packet stream
 with an injected volumetric attack, using the Section 4.2 three-step
-monitor.
+monitor — all through the :class:`repro.api.GraphStream` facade.
 
 Run: PYTHONPATH=src python examples/ddos_monitor.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GLavaSketch, SketchConfig, queries
+from repro.api import GraphStream, Query, SketchConfig
 
 N_HOSTS = 20_000
 TARGET = 4242
 THETA = 2_000.0
 
-cfg = SketchConfig(depth=4, width_rows=1024, width_cols=1024)
-sketch = GLavaSketch.empty(cfg, jax.random.key(0))
+gs = GraphStream.open(SketchConfig(depth=4, width_rows=1024, width_cols=1024))
 rng = np.random.default_rng(0)
 
 print(f"[ddos] monitoring host {TARGET}: alarm when f̃_v(target,←) > {THETA:,.0f}")
@@ -35,19 +32,13 @@ for t in range(40):
         dst = np.concatenate([dst, np.full(3000, TARGET, np.uint32)])
         nbytes = np.concatenate([nbytes, np.full(3000, 1.4, np.float32)])
 
-    alarm, sketch = queries.monitor_step(
-        sketch,
-        jnp.asarray(src),
-        jnp.asarray(dst),
-        jnp.asarray(nbytes),
-        jnp.uint32(TARGET),
-        THETA,
-    )
-    est = float(queries.node_in_flow(sketch, jnp.asarray([TARGET], jnp.uint32))[0])
-    flag = "ALARM" if bool(alarm) else "     "
-    if t % 5 == 0 or bool(alarm) and alarm_at is None:
+    # the paper's 3-step monitor: estimate, alarm, ingest — one facade call
+    alarm = gs.monitor(src, dst, nbytes, watch=TARGET, theta=THETA)
+    est = float(gs.query(Query.in_flow(TARGET)).value)
+    flag = "ALARM" if alarm else "     "
+    if t % 5 == 0 or alarm and alarm_at is None:
         print(f"[ddos] t={t:02d} {flag} f̃_v(target,←)={est:10.1f}")
-    if bool(alarm) and alarm_at is None:
+    if alarm and alarm_at is None:
         alarm_at = t
 
 assert attack_started is not None and alarm_at is not None

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sketch import SketchConfig
+from repro.api import SketchConfig
 from repro.data.graphs import citation_graph
 from repro.integration.sketch_sampler import StreamingDegreeSketch, sketch_weighted_seeds
 from repro.models.gnn import graphsage

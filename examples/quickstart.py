@@ -1,16 +1,17 @@
 """Quickstart: the paper's Fig. 1 walkthrough on the public API.
 
-Builds a gLava sketch over a small graph stream, then runs every query
-family from Section 3.4: edge frequency, point queries, reachability,
-aggregate subgraph (incl. wildcard), triangle counting.
+Opens a :class:`repro.api.GraphStream` session over a small graph stream —
+node labels are plain strings; the facade's vectorized key codec
+(`fnv1a_labels`) encodes them at the boundary — then answers every query
+family from Section 3.4 as ONE heterogeneous `QueryBatch`: edge frequency,
+point queries, reachability, aggregate subgraph (incl. wildcard), triangle
+counting.  Each answer carries the paper's (ε, δ) one-sided error bound.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GLavaSketch, SketchConfig, fnv1a_label, queries
+from repro.api import GraphStream, Query, QueryBatch, SketchConfig, fnv1a_labels
 
 # --- the Fig. 1 graph stream (labels a..g) ---------------------------------
 EDGES = [
@@ -18,45 +19,43 @@ EDGES = [
     ("c", "e"), ("c", "e"), ("c", "e"), ("d", "g"), ("g", "b"),
     ("e", "d"), ("f", "a"), ("b", "f"), ("b", "a"),
 ]
-KEY = {l: fnv1a_label(l) for l in "abcdefg"}
-k = lambda *ls: jnp.asarray([KEY[l] for l in ls], jnp.uint32)
 
-# --- build the sketch: d=4 hash functions, w=256 node buckets ---------------
+# --- open the session: d=4 hash functions, w=256 node buckets ---------------
 cfg = SketchConfig(depth=4, width_rows=256, width_cols=256)
-sketch = GLavaSketch.empty(cfg, jax.random.key(0))
-src = jnp.asarray([KEY[s] for s, _ in EDGES], jnp.uint32)
-dst = jnp.asarray([KEY[d] for _, d in EDGES], jnp.uint32)
-sketch = sketch.update(src, dst)  # one pass, O(1)/edge
+gs = GraphStream.open(cfg)
+gs.ingest([s for s, _ in EDGES], [d for _, d in EDGES])  # one pass, O(1)/edge
 print(f"sketch: {cfg.depth} x {cfg.width_rows} x {cfg.width_cols} "
       f"({cfg.space_bytes()/1024:.0f} KiB, independent of stream length)")
+print(f"label codec: fnv1a_labels(['a','b','c']) = {fnv1a_labels(['a', 'b', 'c'])} "
+      f"(vectorized str/int -> uint32 keys)")
 
-# --- Q1/Q2 (paper Example 4): edge frequency --------------------------------
-est = queries.edge_query(sketch, k("b", "g"), k("c", "b"))
-print(f"f̃(b→c) = {est[0]:.0f} (exact 1)   f̃(g→b) = {est[1]:.0f} (exact 1)")
+# --- the whole Section 3.4 catalogue as ONE mixed batch ---------------------
+# The planner groups by family, fuses each family into a single engine
+# dispatch, and scatters answers back in request order.
+res = gs.query(QueryBatch([
+    Query.edge("b", "c"),                      # Q1/Q2 (Example 4)
+    Query.edge("g", "b"),
+    Query.in_flow("b"),                        # point queries (Section 4.2)
+    Query.out_flow("b"),
+    Query.reach("a", "e"),                     # path queries (Section 4.3)
+    Query.reach("d", "b"),
+    Query.reach("e", "a"),
+    Query.subgraph(["a", "a"], ["b", "c"]),    # Q3 (Example 6)
+    Query.out_flow("b"),                       # Q5 wildcard f̃(b, *) = f̃_v(b, →)
+    Query.subgraph(list("abc"), list("bca")),  # Q4 triangle (Example 7)
+]))
+(e_bc, e_gb, inf_b, outf_b, r_ae, r_db, r_ea, sub, wild, tri) = res
 
-# --- point queries (Section 4.2): DoS-style in-flow monitor ----------------
-inflow = queries.node_in_flow(sketch, k("b"))
-outflow = queries.node_out_flow(sketch, k("b"))
-print(f"f̃_v(b,←) = {inflow[0]:.0f} (exact 3)   f̃_v(b,→) = {outflow[0]:.0f} (exact 4)")
-
-# --- path queries (Section 4.3): reachability -------------------------------
-r = queries.reach_query(sketch, k("a", "d", "e"), k("e", "b", "a"))
-print(f"r̃(a→e) = {bool(r[0])} (true: a→c→e)   r̃(d→b) = {bool(r[1])} "
-      f"(true: d→g→b)   r̃(e→a) = {bool(r[2])} (true: e→d→g→b→a)")
-
-# --- Q3 (Example 6): aggregate subgraph -------------------------------------
-f = queries.subgraph_query(sketch, k("a", "a"), k("b", "c"))
-print(f"f̃({{(a,b),(a,c)}}) = {f:.0f} (exact 3: weight 2 + 1)")
-
-# --- Q5 wildcard + Q4 triangle (Example 7) ----------------------------------
-w = queries.wildcard_edge_query(sketch, k("b"), None)
-print(f"f̃(b, *) = {w[0]:.0f} (exact 4: b→c, b→a ×2, b→f)")
-t = queries.triangle_query(
-    sketch, jnp.uint32(KEY["a"]), jnp.uint32(KEY["b"]), jnp.uint32(KEY["c"])
-)
-print(f"triangle f̃({{(a,b),(b,c),(c,a)}}) = {t:.0f} (exact 0: (c,a) absent)")
+print(f"f̃(b→c) = {e_bc.value:.0f} (exact 1)   f̃(g→b) = {e_gb.value:.0f} (exact 1)")
+print(f"f̃_v(b,←) = {inf_b.value:.0f} (exact 3)   f̃_v(b,→) = {outf_b.value:.0f} (exact 4)")
+print(f"r̃(a→e) = {bool(r_ae.value)} (true: a→c→e)   r̃(d→b) = {bool(r_db.value)} "
+      f"(true: d→g→b)   r̃(e→a) = {bool(r_ea.value)} (true: e→d→g→b→a)")
+print(f"f̃({{(a,b),(a,c)}}) = {sub.value:.0f} (exact 3: weight 2 + 1)")
+print(f"f̃(b, *) = {wild.value:.0f} (exact 4: b→c, b→a ×2, b→f)")
+print(f"triangle f̃({{(a,b),(b,c),(c,a)}}) = {tri.value:.0f} (exact 0: (c,a) absent)")
+print(f"every estimate is {e_bc.error}")
 
 # --- the same analytics on the sketch-as-a-graph (Section 3.3 Remark) -------
-pr = queries.sketch_pagerank(sketch, iters=16)
+pr = gs.pagerank(iters=16)
 print(f"pagerank on the sketch graph: shape {pr.shape}, rows sum to "
       f"{np.asarray(pr.sum(axis=1)).round(3)}")

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import GraphStream, Query, SketchConfig
 from repro.data.lm import MarkovTokens, bigram_stream
-from repro.core.sketch import GLavaSketch, SketchConfig
 from repro.models import transformer as tfm
 from repro.train import compression as comp
 from repro.train import optimizer as opt_mod
@@ -54,18 +54,15 @@ def main():
     rng = np.random.default_rng(0)
     # corpus statistics via the paper's sketch: the token-bigram stream IS a
     # graph stream (DESIGN.md Section 5) — summarized in 4×256×256 counters
-    bigram_sketch = GLavaSketch.empty(
-        SketchConfig(depth=4, width_rows=256, width_cols=256), jax.random.key(9)
+    bigrams = GraphStream.open(
+        SketchConfig(depth=4, width_rows=256, width_cols=256), seed=9
     )
 
     def batches():
-        nonlocal bigram_sketch
         while True:
             toks = gen.batch(args.batch, args.seq + 1, rng)
             bs = bigram_stream(toks)
-            bigram_sketch = bigram_sketch.update(
-                jnp.asarray(bs["src"]), jnp.asarray(bs["dst"])
-            )
+            bigrams.ingest(bs["src"], bs["dst"])
             yield {"tokens": toks}
 
     if args.compress:
@@ -109,13 +106,9 @@ def main():
     losses = [h["loss"] for h in res.history]
     print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
     # show the sketch earning its keep: most frequent bigram estimate
-    from repro.core import queries
-
     toks = gen.batch(4, 65, rng)
     bs = bigram_stream(toks)
-    est = queries.edge_query(
-        bigram_sketch, jnp.asarray(bs["src"][:8]), jnp.asarray(bs["dst"][:8])
-    )
+    est = bigrams.query(Query.edge(bs["src"][:8], bs["dst"][:8])).value
     print(f"[train_lm] sketch bigram-frequency estimates (8 probes): {np.asarray(est)}")
 
 

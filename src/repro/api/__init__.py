@@ -1,0 +1,50 @@
+"""`repro.api` — the canonical public API of the gLava reproduction.
+
+One import gives callers the whole paper surface:
+
+- :class:`GraphStream` — the session facade: open a summary (config,
+  preset, or target (ε, δ)), ingest labeled edge batches, run mixed query
+  workloads, advance windows, checkpoint, merge.
+- :class:`Query` / :class:`QueryBatch` / :class:`QueryResult` — the typed
+  query IR: queries are data; heterogeneous batches are planned into at
+  most one engine dispatch per family and answered in request order with
+  (ε, δ) :class:`ErrorBound` annotations.
+- :func:`encode_labels` / :func:`fnv1a_labels` — the vectorized key codec
+  (str/int node labels -> uint32 keys) applied at this boundary.
+- :class:`SketchConfig` — re-exported so callers can size summaries
+  without importing ``repro.core``.
+
+`repro.core` remains importable for internals (kernels, engines, the
+sketch algebra), but every user-facing entry point — serving engine,
+launch driver, examples, benchmarks — routes through this package.
+"""
+from repro.api.codec import encode_label, encode_labels
+from repro.api.planner import execute, plan
+from repro.api.query import (
+    FAMILIES,
+    ErrorBound,
+    Query,
+    QueryBatch,
+    QueryResult,
+    error_bound_for,
+)
+from repro.api.stream import GraphStream, StreamStats
+from repro.core.hashing import fnv1a_labels
+from repro.core.sketch import SketchConfig
+
+__all__ = [
+    "FAMILIES",
+    "ErrorBound",
+    "GraphStream",
+    "Query",
+    "QueryBatch",
+    "QueryResult",
+    "SketchConfig",
+    "StreamStats",
+    "encode_label",
+    "encode_labels",
+    "error_bound_for",
+    "execute",
+    "fnv1a_labels",
+    "plan",
+]

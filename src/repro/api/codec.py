@@ -1,0 +1,36 @@
+"""Key codec: node labels -> uint32 device keys, at the API boundary.
+
+Graph streams carry IPs, user ids, URLs — arbitrary str/int labels.  The
+device planes (hashing, ingest, query kernels) speak uint32 only, so the
+:class:`~repro.api.stream.GraphStream` facade encodes every label batch
+exactly once, here, with the vectorized FNV-1a from
+:func:`repro.core.hashing.fnv1a_labels`:
+
+- integer labels (Python ints, any numpy/JAX integer dtype) are a masked
+  cast — the identity on values already in the uint32 key space, so code
+  that always used raw integer node ids sees the exact same keys;
+- string labels hash with 32-bit FNV-1a, byte-column-vectorized over the
+  batch (no Python loop per label).
+
+Encoding is deterministic and stateless: the same label maps to the same
+key in every process, which is what lets sketches built on different
+workers merge (same hash family + same key codec = same cells).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import fnv1a_labels
+
+
+def encode_labels(labels) -> np.ndarray:
+    """Encode node labels (scalar, sequence, or array; str or int) to uint32.
+
+    Returns an array of the input's shape — 0-d for a scalar label; callers
+    that need a batch axis wrap with ``np.atleast_1d``."""
+    return fnv1a_labels(labels)
+
+
+def encode_label(label) -> np.uint32:
+    """Scalar convenience: one label -> one uint32 key."""
+    return np.uint32(encode_labels(label))

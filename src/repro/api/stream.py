@@ -1,0 +1,373 @@
+"""`GraphStream` — the one session facade over the paper's summary S.
+
+The paper maintains a SINGLE summary supporting a wide range of graph
+queries over one stream.  `GraphStream` is that object for callers: it
+wraps the ingest plane (:class:`~repro.core.ingest.IngestEngine`, double-
+buffered batched dispatch), the query plane (:class:`~repro.core.
+query_engine.QueryEngine`, planned + fused by :mod:`repro.api.planner`),
+and the optional sliding window (:class:`~repro.core.window.
+SlidingWindowSketch`), distributed plane (`mesh=`), and
+:class:`~repro.checkpoint.manager.CheckpointManager` behind one handle::
+
+    from repro.api import GraphStream, Query
+
+    gs = GraphStream.open("smoke")           # or a SketchConfig / (ε, δ)
+    gs.ingest(["alice", "bob"], ["bob", "carol"])      # labels, not keys
+    res = gs.query(Query.edge("alice", "bob"),
+                   Query.in_flow("bob"),
+                   Query.reach("alice", "carol"))
+    print(res[0].value, res[0].error)        # (ε, δ)-annotated estimate
+
+Node labels (str/int) are encoded exactly once at this boundary by the
+vectorized key codec (:mod:`repro.api.codec`); everything below speaks
+uint32.  Every entry point of the repo (serving engine, launch driver,
+examples, benchmarks) routes through this facade — ``repro.core`` stays
+importable for internals, but `repro.api` is the canonical public API.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.codec import encode_labels
+from repro.api.planner import execute
+from repro.api.query import ErrorBound, Query, QueryBatch, QueryResult, error_bound_for
+from repro.core import queries as queries_mod
+from repro.core.ingest import resolve_backend
+from repro.core.query_engine import QueryEngine
+from repro.core.sketch import GLavaSketch, SketchConfig
+from repro.core.window import SlidingWindowSketch
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Session counters (ingest/query throughput, closure refreshes)."""
+
+    edges_ingested: int = 0
+    ingest_s: float = 0.0
+    queries_served: int = 0
+    query_s: float = 0.0
+    closure_refreshes: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "edges_ingested": self.edges_ingested,
+            "ingest_edges_per_s": self.edges_ingested / max(self.ingest_s, 1e-9),
+            "queries_served": self.queries_served,
+            "queries_per_s": self.queries_served / max(self.query_s, 1e-9),
+            "closure_refreshes": self.closure_refreshes,
+        }
+
+
+def _preset(name: str) -> SketchConfig:
+    from repro.configs import glava
+
+    presets = {
+        "smoke": glava.SMOKE,
+        "base": glava.BASE,
+        "web": glava.WEB,
+        "nonsquare": glava.NONSQUARE,
+    }
+    if name not in presets:
+        raise ValueError(f"unknown preset {name!r} (want {sorted(presets)})")
+    return presets[name]
+
+
+class GraphStream:
+    """One graph-stream session: a summary plus its ingest/query engines.
+
+    Construct via :meth:`open`.  All mutation bumps the sketch *epoch*,
+    which tags the query engine's transitive-closure cache so reach
+    queries amortize one closure per quiescent period."""
+
+    def __init__(
+        self,
+        config: SketchConfig,
+        *,
+        seed: int = 0,
+        window_slices: Optional[int] = None,
+        ingest_backend: str = "auto",
+        query_backend: str = "auto",
+        checkpoint_dir: Optional[str] = None,
+        keep: int = 3,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        double_buffer: bool = True,
+        max_inflight: int = 2,
+    ):
+        if mesh is not None and window_slices:
+            raise ValueError("windowed + distributed sessions are not supported yet")
+        self.config = config
+        if window_slices:
+            self._window: Optional[SlidingWindowSketch] = SlidingWindowSketch.empty(
+                config, window_slices, jax.random.key(seed)
+            )
+            self._sketch: Optional[GLavaSketch] = None
+        else:
+            self._window = None
+            self._sketch = GLavaSketch.empty(config, jax.random.key(seed))
+        self.ingest_backend = resolve_backend(ingest_backend)
+        self.engine = QueryEngine(query_backend)
+        self.stats = StreamStats()
+        self._mesh = mesh
+        self._epoch = 0
+        # Double-buffered ingest: JAX dispatch is async, so staging the next
+        # host batch overlaps the device accumulating the previous one; the
+        # deque bounds how many un-materialized updates may be in flight.
+        self._max_inflight = max_inflight if double_buffer else 0
+        self._inflight: collections.deque = collections.deque()
+        backend = self.ingest_backend
+        self._jit_update = jax.jit(
+            lambda live, s, d, w: live.update(s, d, w, backend=backend)
+        )
+        self._ckpt = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            self._ckpt = CheckpointManager(checkpoint_dir, keep=keep)
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def open(
+        cls,
+        config: Union[SketchConfig, str, None] = None,
+        *,
+        epsilon: Optional[float] = None,
+        delta: Optional[float] = None,
+        **kwargs,
+    ) -> "GraphStream":
+        """Open a session from a :class:`SketchConfig`, a preset name
+        ("smoke" / "base" / "web" / "nonsquare"), or a target (ε, δ) pair
+        sized per paper Thm 1 / Lemma 5.2.  Remaining kwargs are forwarded
+        to the constructor (seed, window_slices, ingest_backend,
+        query_backend, checkpoint_dir, mesh, ...)."""
+        if isinstance(config, str):
+            config = _preset(config)
+        elif config is None:
+            if epsilon is None or delta is None:
+                raise ValueError("open() needs a config, a preset, or (epsilon, delta)")
+            config = SketchConfig.for_error(epsilon, delta)
+        elif not isinstance(config, SketchConfig):
+            raise TypeError(f"config must be SketchConfig or preset name, got {config!r}")
+        return cls(config, **kwargs)
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """Mutation counter; tags the engine's closure cache."""
+        return self._epoch
+
+    @property
+    def sketch(self) -> GLavaSketch:
+        """The live summary (window sessions materialize the window sum)."""
+        self.flush()
+        return self._live()
+
+    def _live(self) -> GLavaSketch:
+        return self._window.window_sketch() if self._window else self._sketch
+
+    def error_bound(self, family: str = "edge") -> ErrorBound:
+        """The (ε, δ) annotation this session attaches to ``family`` results."""
+        return error_bound_for(family, self.config)
+
+    # -- ingest ---------------------------------------------------------------
+
+    def ingest(self, src, dst, weights=None) -> None:
+        """Fold one edge batch into the summary.  ``src``/``dst`` are label
+        batches (str or int — encoded here by the key codec); returns as
+        soon as the device accepts the batch (double-buffered; call
+        :meth:`flush` or any query to synchronize)."""
+        t0 = time.time()
+        s = jnp.asarray(np.atleast_1d(encode_labels(src)))
+        d = jnp.asarray(np.atleast_1d(encode_labels(dst)))
+        if s.shape != d.shape:
+            raise ValueError(f"src/dst shape mismatch: {s.shape} vs {d.shape}")
+        w = (
+            jnp.ones(s.shape, jnp.float32)
+            if weights is None
+            else jnp.asarray(weights, jnp.float32)
+        )
+        if self._mesh is not None:
+            from repro.core.distributed import distributed_ingest
+
+            self.flush()
+            self._sketch = distributed_ingest(self._mesh, self._sketch, s, d, w)
+            self._inflight.append(self._sketch.counters)
+        elif self._window is not None:
+            self._window = self._jit_update(self._window, s, d, w)
+            self._inflight.append(self._window.slices)
+        else:
+            self._sketch = self._jit_update(self._sketch, s, d, w)
+            self._inflight.append(self._sketch.counters)
+        while len(self._inflight) > self._max_inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        self.stats.edges_ingested += int(s.shape[0])
+        self.stats.ingest_s += time.time() - t0
+        self._epoch += 1
+
+    def delete(self, src, dst, weights=None) -> None:
+        """Turnstile deletion: negative-weight ingest (paper Section 6.1.1)."""
+        if weights is None:
+            weights = np.ones(len(np.atleast_1d(np.asarray(src))), np.float32)
+        self.ingest(src, dst, -np.asarray(weights))
+
+    def flush(self) -> None:
+        """Block until every dispatched ingest batch has landed on device."""
+        if not self._inflight:
+            return
+        t0 = time.time()
+        while self._inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        self.stats.ingest_s += time.time() - t0
+
+    # -- queries --------------------------------------------------------------
+
+    def query(self, *queries) -> Union[QueryResult, List[QueryResult]]:
+        """Answer queries against the live summary.
+
+        Accepts a single :class:`Query` (returns one :class:`QueryResult`),
+        several Query arguments, or one :class:`QueryBatch` (returns a
+        request-ordered result list).  The planner fuses the batch into at
+        most one engine dispatch per family."""
+        single = len(queries) == 1 and isinstance(queries[0], Query)
+        if len(queries) == 1 and isinstance(queries[0], QueryBatch):
+            batch = queries[0]
+        else:
+            batch = QueryBatch(queries)
+        self.flush()
+        t0 = time.time()
+        results = execute(self.engine, self._live(), batch, epoch=self._epoch)
+        self.stats.query_s += time.time() - t0
+        for r in results:
+            v = r.value
+            self.stats.queries_served += (
+                int(np.size(v[0])) if isinstance(v, tuple) else int(np.size(v))
+            )
+        self.stats.closure_refreshes = self.engine.closure_refreshes
+        return results[0] if single else results
+
+    def monitor(self, src, dst, weights, watch, theta: float) -> bool:
+        """Paper Section 4.2's three-step real-time monitor: estimate the
+        watched node's in-flow, alarm if this batch pushes it over θ, then
+        ingest the batch.  Returns the alarm decision."""
+        if self._window is not None:
+            raise ValueError("monitor() runs on non-windowed sessions")
+        self.flush()
+        t0 = time.time()
+        s = jnp.asarray(np.atleast_1d(encode_labels(src)))
+        d = jnp.asarray(np.atleast_1d(encode_labels(dst)))
+        w = jnp.asarray(weights, jnp.float32)
+        watch_key = jnp.asarray(np.uint32(encode_labels(watch)))
+        alarm, self._sketch = queries_mod.monitor_step(
+            self._sketch, s, d, w, watch_key, theta
+        )
+        self.stats.edges_ingested += int(s.shape[0])
+        self.stats.ingest_s += time.time() - t0
+        self._epoch += 1
+        return bool(alarm)
+
+    def pagerank(self, damping: float = 0.85, iters: int = 32) -> np.ndarray:
+        """Run PageRank directly on the summary-as-a-graph (Section 3.3
+        Remark): returns (d, w) bucket ranks."""
+        self.flush()
+        return np.asarray(queries_mod.sketch_pagerank(self._live(), damping, iters))
+
+    # -- convenience wrappers (vectorized; used by the serving engine) --------
+
+    def edge_frequency(self, src, dst) -> np.ndarray:
+        return np.atleast_1d(self.query(Query.edge(src, dst)).value)
+
+    def in_flow(self, keys) -> np.ndarray:
+        return np.atleast_1d(self.query(Query.in_flow(keys)).value)
+
+    def out_flow(self, keys) -> np.ndarray:
+        return np.atleast_1d(self.query(Query.out_flow(keys)).value)
+
+    def heavy_hitters(self, keys, theta: float) -> np.ndarray:
+        in_heavy, _ = self.query(Query.heavy(keys, theta)).value
+        return np.atleast_1d(in_heavy)
+
+    def reachable(self, src, dst) -> np.ndarray:
+        return np.atleast_1d(self.query(Query.reach(src, dst)).value)
+
+    def subgraph_weight(self, src, dst) -> float:
+        return float(self.query(Query.subgraph(src, dst)).value)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def advance_window(self) -> None:
+        """Move the sliding window to the next time slice (expiring the
+        oldest slice); no-op for non-windowed sessions."""
+        if self._window is not None:
+            self.flush()
+            self._window = self._window.advance()
+            self._epoch += 1
+
+    def merge(self, other: "GraphStream") -> "GraphStream":
+        """Merge another session's summary into this one (linearity; the
+        paper's distributed merge-by-add).  Both must share a hash family —
+        open them with the same config + seed."""
+        if self._window is not None or other._window is not None:
+            raise ValueError("merge() runs on non-windowed sessions")
+        self.flush()
+        other.flush()
+        if not self._sketch.same_family(other._sketch):
+            raise ValueError(
+                "cannot merge sketches with different hash families "
+                "(open both sessions with the same config and seed)"
+            )
+        self._sketch = self._sketch.merge(other._sketch)
+        self.stats.edges_ingested += other.stats.edges_ingested
+        self._epoch += 1
+        return self
+
+    def checkpoint(self, step: Optional[int] = None) -> int:
+        """Durably save the session state (requires ``checkpoint_dir``).
+        Returns the step the checkpoint was saved under."""
+        if self._ckpt is None:
+            raise ValueError("open the session with checkpoint_dir= to checkpoint")
+        self.flush()
+        step = self._epoch if step is None else step
+        state = self._window if self._window is not None else self._sketch
+        self._ckpt.save(step, state, metadata={"epoch": self._epoch})
+        return step
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Restore session state from the checkpoint directory (latest step
+        by default).  Handles pre-register checkpoints via the fill-missing
+        schema-evolution path.  Returns the restored step."""
+        if self._ckpt is None:
+            raise ValueError("open the session with checkpoint_dir= to restore")
+        self.flush()
+        like = self._window if self._window is not None else self._sketch
+        state, meta = self._ckpt.restore(step, like=like, fill_missing=True)
+        if meta.get("filled_leaves"):
+            # Registers absent from an old checkpoint: rebuild from counters.
+            if isinstance(state, GLavaSketch):
+                state = state.with_counters(state.counters)
+            else:
+                state = dataclasses.replace(
+                    state,
+                    row_flows=jnp.sum(state.slices, axis=3),
+                    col_flows=jnp.sum(state.slices, axis=2),
+                )
+        if self._window is not None:
+            self._window = state
+        else:
+            self._sketch = state
+        self._epoch = int(meta.get("epoch", meta["step"]))
+        self.engine.invalidate()  # any cached closure predates the restore
+        return int(meta["step"])
+
+    def summary(self) -> Dict[str, float]:
+        """Flushed session stats — the only honest read of ingest throughput
+        while ingest is double-buffered."""
+        self.flush()
+        return self.stats.summary()

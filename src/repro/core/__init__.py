@@ -5,6 +5,7 @@ from repro.core.hashing import (
     affine_hash,
     affine_hash_np,
     fnv1a_label,
+    fnv1a_labels,
     make_hash_family,
     mix_keys,
     mulmod31,
@@ -30,6 +31,7 @@ __all__ = [
     "affine_hash",
     "affine_hash_np",
     "fnv1a_label",
+    "fnv1a_labels",
     "make_hash_family",
     "mix_keys",
     "mulmod31",

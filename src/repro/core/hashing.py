@@ -169,3 +169,49 @@ def fnv1a_label(label: Any) -> int:
         h ^= byte
         h = (h * 0x01000193) & 0xFFFFFFFF
     return h
+
+
+def fnv1a_labels(labels) -> np.ndarray:
+    """Vectorized :func:`fnv1a_label`: a batch of node labels -> uint32 keys.
+
+    Element-for-element identical to ``fnv1a_label`` (tested), but vectorized
+    over the batch: integer labels are one masked cast; string labels loop
+    over BYTE COLUMNS of the utf-8 matrix (max-label-length iterations, each
+    an O(n) numpy op) instead of Python-looping per label.  Labels containing
+    NUL bytes fall back to the per-element path (numpy's fixed-width byte
+    storage cannot represent embedded NULs).  Returns an array of
+    ``labels``' shape (0-d for a scalar label).
+    """
+    if isinstance(labels, (list, tuple)) and not (
+        all(isinstance(x, str) for x in labels)
+        or all(isinstance(x, (int, np.integer)) for x in labels)
+    ):
+        # Mixed int/str labels: np.asarray would silently stringify the ints
+        # ("1" hashes differently from 1) — force the per-element path.
+        labels = np.asarray(labels, dtype=object)
+    arr = np.asarray(labels)
+    if arr.dtype == np.uint32:
+        return arr  # the mask is the identity — no copy on the hot path
+    if arr.dtype.kind in "ib":  # bools are ints to fnv1a_label (True -> 1)
+        return (arr.astype(np.int64) & 0xFFFFFFFF).astype(np.uint32)
+    if arr.dtype.kind == "u":
+        return (arr.astype(np.uint64) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    if arr.dtype.kind == "U" and "\x00" not in "".join(arr.ravel().tolist()):
+        flat = arr.ravel()
+        enc = np.char.encode(flat, "utf-8")  # S<width>, NUL-padded
+        width = enc.dtype.itemsize
+        h = np.full(flat.shape, 0x811C9DC5, np.uint32)
+        if width and flat.size:
+            mat = np.ascontiguousarray(enc).view(np.uint8).reshape(flat.size, width)
+            lengths = np.char.str_len(enc)  # utf-8 byte length per label
+            prime = np.uint32(0x01000193)
+            with np.errstate(over="ignore"):  # uint32 wraparound is the hash
+                for j in range(width):
+                    live = j < lengths
+                    h = np.where(live, (h ^ mat[:, j].astype(np.uint32)) * prime, h)
+        return h.reshape(arr.shape)
+    # object / bytes / float / NUL-bearing labels: per-element semantics
+    out = np.fromiter(
+        (fnv1a_label(x) for x in arr.ravel()), np.uint32, count=arr.size
+    )
+    return out.reshape(arr.shape)

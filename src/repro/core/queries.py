@@ -139,6 +139,36 @@ def subgraph_query_opt(
     return jnp.where(jnp.any(per_edge == 0), 0.0, total)
 
 
+def subgraph_query_batch(
+    sketch: GLavaSketch, src: jax.Array, dst: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Batched f̃(Q) for n subgraph queries padded to a common edge count k.
+
+    ``src``/``dst`` are (n, k) key arrays, ``mask`` (n, k) bool marks REAL
+    edges — padded slots are treated as trivially present with weight 0, so
+    a padded query answers exactly what :func:`subgraph_query` answers on
+    its unpadded edge list (bit-identical in the integer-weight regime; the
+    plan-and-fuse API plane uses this to serve a whole subgraph family in
+    one dispatch)."""
+    r = sketch.row_hash(src)  # (d, n, k)
+    c = sketch.col_hash(dst)
+    d_idx = jnp.arange(r.shape[0])[:, None, None]
+    cells = sketch.counters[d_idx, r, c]                      # (d, n, k)
+    live = mask[None, :, :]
+    present = jnp.all(jnp.where(live, cells > 0, True), axis=2)   # (d, n)
+    wsum = jnp.sum(jnp.where(live, cells, 0.0), axis=2)           # (d, n)
+    weight_i = jnp.where(present, wsum, 0.0)
+    return jnp.min(weight_i, axis=0)                               # (n,)
+
+
+def check_heavy_keys_vec(sketch: GLavaSketch, keys: jax.Array, thetas: jax.Array):
+    """Per-query-threshold variant of :func:`check_heavy_keys`: ``thetas``
+    is a (Q,) array riding alongside ``keys``, so one dispatch serves a
+    heterogeneous heavy-hitter batch.  Elementwise identical to the scalar-θ
+    path."""
+    return node_in_flow(sketch, keys) > thetas, node_out_flow(sketch, keys) > thetas
+
+
 def wildcard_edge_query(
     sketch: GLavaSketch,
     src: Optional[jax.Array],

@@ -28,6 +28,7 @@ together.
 """
 from __future__ import annotations
 
+import collections
 import os
 from typing import Callable, Dict, Optional, Tuple
 
@@ -86,8 +87,10 @@ _FAMILIES: Dict[str, Tuple[Callable, Callable]] = {
     "out_flow": (queries.node_out_flow, queries.node_out_flow),
     "flow": (queries.node_flow, queries.node_flow),
     "heavy": (queries.check_heavy_keys, queries.check_heavy_keys),
+    "heavy_vec": (queries.check_heavy_keys_vec, queries.check_heavy_keys_vec),
     "subgraph": (queries.subgraph_query, queries.subgraph_query),
     "subgraph_opt": (queries.subgraph_query_opt, queries.subgraph_query_opt),
+    "subgraph_batch": (queries.subgraph_query_batch, queries.subgraph_query_batch),
     "reach_pre": (
         reach.reach_query_precomputed,
         reach.reach_query_precomputed,
@@ -113,6 +116,10 @@ class QueryEngine:
         self._closure_epoch: Optional[int] = None
         self._closure_family: Optional[jax.Array] = None
         self.closure_refreshes = 0
+        # Engine dispatches per family (one per padded/chunked batch call) —
+        # the API planner's one-dispatch-per-family contract is asserted
+        # against these counts.
+        self.dispatches: collections.Counter = collections.Counter()
 
     # -- jit cache -----------------------------------------------------------
 
@@ -137,6 +144,7 @@ class QueryEngine:
         multiple of pad_q so the jit cache sees few distinct shapes, chunk
         batches beyond chunk_q, slice the answers back to Q.  ``tail_args``
         ride along un-padded after the key arrays (e.g. a traced θ)."""
+        self.dispatches[family] += 1
         fn = self._fn(family)
         q = keys[0].shape[0]
         outs = []
@@ -179,12 +187,30 @@ class QueryEngine:
             "heavy", (sketch,), (keys,), (jnp.asarray(theta, jnp.float32),)
         )
 
+    def heavy_vec(self, sketch: GLavaSketch, keys, thetas):
+        """Heavy-hitter check with a PER-QUERY θ array — lets the planner
+        serve a mixed-θ heavy family in one dispatch.  ``thetas`` pads with
+        zeros alongside the keys (padded lanes are sliced away)."""
+        return self._run_padded(
+            "heavy_vec",
+            (sketch,),
+            (keys, jnp.asarray(thetas, jnp.float32)),
+        )
+
     def subgraph(self, sketch: GLavaSketch, src, dst, optimized: bool = False):
         # Subgraph queries reduce over the WHOLE edge set — zero-padding
         # would change the answer (absent-edge semantics) — so they jit at
         # their exact (small-k) shape instead of going through _run_padded.
         family = "subgraph_opt" if optimized else "subgraph"
+        self.dispatches[family] += 1
         return self._fn(family)(sketch, src, dst)
+
+    def subgraph_batch(self, sketch: GLavaSketch, src, dst, mask):
+        """n subgraph queries padded to a common k with a validity mask —
+        masked padding keeps the revised absent-edge semantics exact, so a
+        whole subgraph family is one dispatch (jitted at the (n, k) shape)."""
+        self.dispatches["subgraph_batch"] += 1
+        return self._fn("subgraph_batch")(sketch, src, dst, mask)
 
     # -- reachability + closure cache ----------------------------------------
 

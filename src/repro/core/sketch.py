@@ -62,6 +62,17 @@ class SketchConfig:
         d = max(1, int(np.ceil(np.log(1.0 / delta))))
         return SketchConfig(depth=d, width_rows=w, width_cols=w)
 
+    def error_bound(self) -> tuple:
+        """The (ε, δ) this sketch certifies — the inverse of :meth:`for_error`:
+        ε = e²/(w_r·w_c) (additive error ε·F with probability ≥ 1 − δ, paper
+        Thm 1), δ = e^(−d).  Nudged up by a 1e-12 relative factor so
+        ``SketchConfig.for_error(*cfg.error_bound())`` round-trips to the same
+        square config despite float rounding in the ceil(e/sqrt(ε)) inverse
+        (e.g. w=7 lands on 8 without the nudge)."""
+        eps = float(np.e**2 / (self.width_rows * self.width_cols)) * (1 + 1e-12)
+        delta = float(np.exp(-self.depth)) * (1 + 1e-12)
+        return eps, delta
+
 
 def scatter_flows(
     row_flows: jax.Array,  # (d, w_r)
@@ -152,10 +163,14 @@ class GLavaSketch:
         src: jax.Array,
         dst: jax.Array,
         weights: Optional[jax.Array] = None,
-        backend: str = "scatter",
+        backend: str = "auto",
         chunk: int = DEFAULT_CHUNK,
     ) -> "GLavaSketch":
-        """Ingest a batch of stream elements (x, y; w)."""
+        """Ingest a batch of stream elements (x, y; w).
+
+        ``backend`` resolves through the :class:`IngestEngine` convention:
+        "auto" honours ``REPRO_INGEST_BACKEND``, else pallas on TPU and
+        scatter elsewhere."""
         if weights is None:
             weights = jnp.ones(src.shape, jnp.float32)
         weights = weights.astype(jnp.float32)
@@ -177,11 +192,22 @@ class GLavaSketch:
             self, counters=counters, row_flows=row_flows, col_flows=col_flows
         )
 
-    def delete(self, src, dst, weights=None, backend: str = "scatter"):
-        """Turnstile deletion (paper Section 6.1.1): negative-weight update."""
+    def delete(
+        self,
+        src,
+        dst,
+        weights=None,
+        backend: str = "auto",
+        chunk: int = DEFAULT_CHUNK,
+    ):
+        """Turnstile deletion (paper Section 6.1.1): negative-weight update.
+
+        Resolves the backend through the :class:`IngestEngine` exactly like
+        :meth:`update`, so ``REPRO_INGEST_BACKEND`` / the TPU pallas fast
+        path apply to deletes too."""
         if weights is None:
             weights = jnp.ones(src.shape, jnp.float32)
-        return self.update(src, dst, -weights, backend=backend)
+        return self.update(src, dst, -weights, backend=backend, chunk=chunk)
 
     def update_sequential(self, src, dst, weights=None) -> "GLavaSketch":
         """Strictly-sequential per-edge ingest (the paper's literal Step 2).

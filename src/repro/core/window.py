@@ -56,7 +56,7 @@ class SlidingWindowSketch:
     def n_slices(self) -> int:
         return self.slices.shape[0]
 
-    def update(self, src, dst, weights=None, backend: str = "scatter"):
+    def update(self, src, dst, weights=None, backend: str = "auto"):
         """Ingest into the active slice (counters AND its registers)."""
         active = dataclasses.replace(
             self.template,

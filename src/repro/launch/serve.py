@@ -1,17 +1,19 @@
-"""Serving driver: ``python -m repro.launch.serve`` runs the gLava sketch
-service against a synthetic network-traffic stream with a mixed query
-workload and prints throughput/accuracy stats."""
+"""Serving driver: ``python -m repro.launch.serve`` runs a gLava
+:class:`repro.api.GraphStream` session against a synthetic network-traffic
+stream with a mixed query workload — issued as ONE heterogeneous
+:class:`repro.api.QueryBatch` per ingest batch, so the planner fuses the
+whole workload into one engine dispatch per family — and prints
+throughput/accuracy stats."""
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
 
+from repro.api import GraphStream, Query, QueryBatch, SketchConfig
 from repro.core.ingest import BACKENDS
 from repro.core.query_engine import QUERY_BACKENDS
-from repro.core.sketch import SketchConfig
 from repro.data.graphs import edge_stream
-from repro.serve.engine import SketchServer
 
 
 def main():
@@ -38,28 +40,36 @@ def main():
     args = ap.parse_args()
 
     cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
-    server = SketchServer(
+    stream = GraphStream.open(
         cfg,
         window_slices=args.window_slices or None,
         ingest_backend=args.ingest_backend,
         query_backend=args.query_backend,
     )
     rng = np.random.default_rng(0)
-    stream = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
+    data = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
 
     for lo in range(0, args.edges, args.batch):
         hi = min(args.edges, lo + args.batch)
-        server.ingest(
-            stream["src"][lo:hi], stream["dst"][lo:hi], stream["weight"][lo:hi]
+        stream.ingest(
+            data["src"][lo:hi], data["dst"][lo:hi], data["weight"][lo:hi]
         )
-        # mixed query workload between ingest batches
+        # mixed query workload between ingest batches: one heterogeneous
+        # batch -> one planned dispatch per family
         qs = rng.integers(0, args.nodes, 1024).astype(np.uint32)
         qd = rng.integers(0, args.nodes, 1024).astype(np.uint32)
-        server.edge_frequency(qs, qd)
-        server.in_flow(qs[:256])
-        server.reachable(qs[:64], qd[:64])
+        stream.query(
+            QueryBatch(
+                [
+                    Query.edge(qs, qd),
+                    Query.in_flow(qs[:256]),
+                    Query.heavy(qs[:64], theta=float(hi - lo) / 100),
+                    Query.reach(qs[:64], qd[:64]),
+                ]
+            )
+        )
 
-    stats = server.summary()
+    stats = stream.summary()
     print("[serve] " + " ".join(f"{k}={v:,.1f}" for k, v in stats.items()))
 
 

@@ -1,53 +1,30 @@
 """gLava serving engine: the paper's data structure as an online service.
 
-Ingest path: batched edge updates through the :mod:`repro.core.ingest`
-engine (one jitted call per batch, O(1)/edge), DOUBLE-BUFFERED — the next
-batch is staged on the host and dispatched while the device still
-accumulates the previous one; the server only blocks when the in-flight
-queue exceeds ``max_inflight`` or a query needs the live counters.
-Backend "auto" selects the Pallas fast path on TPU hosts.
+`SketchServer` is the network-service wrapper around the public API plane:
+one :class:`repro.api.GraphStream` session carries the summary, the
+double-buffered ingest path, the planned/fused query path, the sliding
+window, and the session stats — the server only adds the service-shaped
+method surface (per-family endpoints a request router binds to).  All
+user-facing operations go through `repro.api`; no core internals are
+touched here (DESIGN.md Section 7).
 
-Query path: every family dispatches through one
-:class:`repro.core.query_engine.QueryEngine` (persistent jit cache, query
-padding, backend "auto" = fused Pallas multi-query kernel on TPU).  Point
-and heavy-hitter queries read the sketch's maintained flow registers
-(O(d·Q) gathers); reachability is served from the engine's epoch-tagged
-transitive closure, which refreshes lazily after ingest so all-pairs
-closure cost amortizes over query batches (DESIGN.md Sections 2-4).
+Ingest path: batched edge updates, DOUBLE-BUFFERED — the next batch is
+staged on the host and dispatched while the device still accumulates the
+previous one; the server only blocks when the in-flight queue exceeds
+``max_inflight`` or a query needs the live counters.  Backend "auto"
+selects the Pallas fast path on TPU hosts.
+
+Query path: every endpoint builds typed :class:`repro.api.Query` objects
+and lets the session's planner fuse them through the jit-cached
+QueryEngine; reachability is served from the engine's epoch-tagged
+transitive closure, which refreshes lazily after ingest (DESIGN.md
+Sections 2-4, 7).
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
 from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import GLavaSketch, SketchConfig
-from repro.core.ingest import resolve_backend
-from repro.core.query_engine import QueryEngine
-from repro.core.window import SlidingWindowSketch
-
-
-@dataclasses.dataclass
-class ServeStats:
-    edges_ingested: int = 0
-    ingest_s: float = 0.0
-    queries_served: int = 0
-    query_s: float = 0.0
-    closure_refreshes: int = 0
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "edges_ingested": self.edges_ingested,
-            "ingest_edges_per_s": self.edges_ingested / max(self.ingest_s, 1e-9),
-            "queries_served": self.queries_served,
-            "queries_per_s": self.queries_served / max(self.query_s, 1e-9),
-            "closure_refreshes": self.closure_refreshes,
-        }
+from repro.api import GraphStream, Query, SketchConfig
 
 
 class SketchServer:
@@ -61,132 +38,67 @@ class SketchServer:
         double_buffer: bool = True,
         max_inflight: int = 2,
     ):
-        if window_slices:
-            self.window = SlidingWindowSketch.empty(
-                config, window_slices, jax.random.key(seed)
-            )
-            self.sketch = None
-        else:
-            self.window = None
-            self.sketch = GLavaSketch.empty(config, jax.random.key(seed))
-        self.backend = resolve_backend(ingest_backend)
-        self.stats = ServeStats()
-        self.engine = QueryEngine(query_backend)
-        # Sketch epoch: bumped on every mutation; tags the engine's closure
-        # cache so reach queries amortize one closure per quiescent period.
-        self._epoch = 0
-        # double-buffered ingest: JAX dispatch is async, so staging the next
-        # host batch overlaps the device accumulating the previous one; the
-        # deque bounds how many un-materialized updates may be in flight.
-        self._max_inflight = max_inflight if double_buffer else 0
-        self._inflight: collections.deque = collections.deque()
-        backend = self.backend
-        self._jit_update = jax.jit(
-            lambda live, s, d, w: live.update(s, d, w, backend=backend)
+        self.stream = GraphStream(
+            config,
+            seed=seed,
+            window_slices=window_slices,
+            ingest_backend=ingest_backend,
+            query_backend=query_backend,
+            double_buffer=double_buffer,
+            max_inflight=max_inflight,
         )
+
+    @property
+    def stats(self):
+        return self.stream.stats
+
+    @property
+    def engine(self):
+        return self.stream.engine
 
     # -- ingest ---------------------------------------------------------------
 
-    def _live(self) -> GLavaSketch:
-        return self.window.window_sketch() if self.window else self.sketch
-
-    def ingest(self, src: np.ndarray, dst: np.ndarray, weights=None):
+    def ingest(self, src, dst, weights=None):
         """Dispatch one edge batch; returns as soon as the device accepts it
         (call :meth:`flush` / any query to synchronize)."""
-        t0 = time.time()
-        s = jnp.asarray(src, jnp.uint32)
-        d = jnp.asarray(dst, jnp.uint32)
-        w = (
-            jnp.ones(s.shape, jnp.float32)
-            if weights is None
-            else jnp.asarray(weights, jnp.float32)
-        )
-        if self.window:
-            self.window = self._jit_update(self.window, s, d, w)
-            self._inflight.append(self.window.slices)
-        else:
-            self.sketch = self._jit_update(self.sketch, s, d, w)
-            self._inflight.append(self.sketch.counters)
-        while len(self._inflight) > self._max_inflight:
-            jax.block_until_ready(self._inflight.popleft())
-        self.stats.edges_ingested += len(src)
-        self.stats.ingest_s += time.time() - t0
-        self._epoch += 1
+        self.stream.ingest(src, dst, weights)
 
     def flush(self):
         """Block until every dispatched ingest batch has landed on device."""
-        if not self._inflight:
-            return
-        t0 = time.time()
-        while self._inflight:
-            jax.block_until_ready(self._inflight.popleft())
-        self.stats.ingest_s += time.time() - t0
+        self.stream.flush()
 
     def summary(self) -> Dict[str, float]:
         """Flushed stats — the only honest read of ingest throughput while
-        ingest is double-buffered (raw ``stats.summary()`` counts dispatch
-        time only for still-in-flight batches)."""
-        self.flush()
-        return self.stats.summary()
+        ingest is double-buffered."""
+        return self.stream.summary()
 
     def advance_window(self):
-        if self.window:
-            self.flush()
-            self.window = self.window.advance()
-            self._epoch += 1
+        self.stream.advance_window()
 
-    # -- queries --------------------------------------------------------------
-
-    def _timed(self, fn, *args):
-        self.flush()
-        t0 = time.time()
-        out = np.asarray(fn(self._live(), *args))
-        self.stats.query_s += time.time() - t0
-        self.stats.queries_served += int(np.size(out))
-        return out
+    # -- per-family service endpoints -----------------------------------------
 
     def edge_frequency(self, src, dst):
-        return self._timed(
-            self.engine.edge,
-            jnp.asarray(src, jnp.uint32),
-            jnp.asarray(dst, jnp.uint32),
-        )
+        return self.stream.edge_frequency(src, dst)
 
     def in_flow(self, keys):
-        return self._timed(self.engine.in_flow, jnp.asarray(keys, jnp.uint32))
+        return self.stream.in_flow(keys)
 
     def out_flow(self, keys):
-        return self._timed(self.engine.out_flow, jnp.asarray(keys, jnp.uint32))
+        return self.stream.out_flow(keys)
 
     def heavy_hitters(self, keys, theta: float):
-        return self.in_flow(keys) > theta
+        return self.stream.heavy_hitters(keys, theta)
 
     def reachable(self, src, dst):
-        self.flush()
-        t0 = time.time()
-        out = np.asarray(
-            self.engine.reach(
-                self._live(),
-                jnp.asarray(src, jnp.uint32),
-                jnp.asarray(dst, jnp.uint32),
-                epoch=self._epoch,
-            )
-        )
-        self.stats.query_s += time.time() - t0
-        self.stats.queries_served += len(out)
-        self.stats.closure_refreshes = self.engine.closure_refreshes
-        return out
+        return self.stream.reachable(src, dst)
 
     def subgraph_weight(self, src, dst):
-        self.flush()
-        t0 = time.time()
-        out = float(
-            self.engine.subgraph(
-                self._live(),
-                jnp.asarray(src, jnp.uint32),
-                jnp.asarray(dst, jnp.uint32),
-            )
-        )
-        self.stats.query_s += time.time() - t0
-        self.stats.queries_served += 1
-        return out
+        return self.stream.subgraph_weight(src, dst)
+
+    def query(self, *queries):
+        """Heterogeneous mixed-family batches, planned and fused — the
+        service endpoint for callers that speak the typed IR directly."""
+        return self.stream.query(*queries)
+
+    # intentionally re-exported so request routers can build IR objects
+    Query = Query

@@ -1,0 +1,463 @@
+"""API-plane tests: the vectorized key codec, the typed query IR, the
+plan-and-fuse execution contract (request order, bit-identity to the
+per-family oracle, exactly one engine dispatch per family, persistent jit
+cache), (ε, δ) annotations round-tripping through ``SketchConfig.for_error``,
+the GraphStream facade lifecycle (window / checkpoint / merge / monitor),
+and the turnstile-delete backend resolution satellite."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (
+    GraphStream,
+    Query,
+    QueryBatch,
+    QueryResult,
+    SketchConfig,
+    encode_labels,
+    error_bound_for,
+)
+from repro.core import GLavaSketch, QueryEngine, queries
+from repro.core.hashing import fnv1a_label, fnv1a_labels
+
+
+# ---------------------------------------------------------------------------
+# vectorized key codec
+# ---------------------------------------------------------------------------
+
+
+_CHARS = list("abz019._:- 世éß")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    labels=st.lists(
+        st.lists(st.sampled_from(_CHARS), min_size=0, max_size=12),
+        min_size=1,
+        max_size=16,
+    )
+)
+def test_fnv1a_labels_matches_scalar_strings(labels):
+    labels = ["".join(cs) for cs in labels]
+    got = fnv1a_labels(labels)
+    want = np.array([fnv1a_label(l) for l in labels], np.uint32)
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.uint32
+
+
+@settings(max_examples=25, deadline=None)
+@given(values=st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=16))
+def test_fnv1a_labels_matches_scalar_ints(values):
+    got = fnv1a_labels(values)
+    want = np.array([fnv1a_label(int(v)) for v in values], np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fnv1a_labels_edge_cases():
+    # empty string = FNV offset basis; scalars stay 0-d; uint wrap matches
+    assert fnv1a_labels([""])[0] == np.uint32(0x811C9DC5)
+    assert np.ndim(fnv1a_labels("abc")) == 0
+    assert fnv1a_labels("abc") == fnv1a_label("abc")
+    assert fnv1a_labels(np.uint64(2**32 + 7)) == 7
+    # mixed int/str lists must NOT silently stringify the ints
+    got = fnv1a_labels([7, "7"])
+    assert got[0] == 7 and got[1] == fnv1a_label("7") and got[1] != 7
+    # NUL-bearing labels take the exact per-element path
+    assert fnv1a_labels(["a\x00b"])[0] == fnv1a_label("a\x00b")
+    # bool labels hash as ints (True -> 1) regardless of batch composition
+    assert fnv1a_labels([True])[0] == fnv1a_label(True) == 1
+    assert fnv1a_labels([True, 5])[0] == 1
+    # already-uint32 arrays pass through without a copy
+    keys = np.asarray([3, 4], np.uint32)
+    assert fnv1a_labels(keys) is keys
+    # 2-D shape is preserved
+    assert fnv1a_labels([["a", "b"], ["c", "d"]]).shape == (2, 2)
+
+
+def test_encode_labels_integer_identity():
+    keys = np.asarray([0, 1, 2**31, 2**32 - 1], np.uint32)
+    np.testing.assert_array_equal(encode_labels(keys), keys)
+    np.testing.assert_array_equal(
+        encode_labels(jnp.asarray(keys)), keys
+    )  # jax arrays encode too
+
+
+# ---------------------------------------------------------------------------
+# (ε, δ) annotations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth,width", [(1, 2), (2, 7), (3, 64), (4, 256), (5, 8192)])
+def test_error_bound_roundtrips_for_error(depth, width):
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    eps, delta = cfg.error_bound()
+    assert SketchConfig.for_error(eps, delta) == cfg
+
+
+def test_error_bound_sides():
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+    count = error_bound_for("edge", cfg)
+    boolean = error_bound_for("reach", cfg)
+    assert count.side == "over-estimate" and count.epsilon is not None
+    assert boolean.side == "no-false-negative" and boolean.epsilon is None
+    assert count.delta == boolean.delta
+
+
+# ---------------------------------------------------------------------------
+# plan-and-fuse: order, bit-identity, one dispatch per family, jit cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def loaded_stream():
+    gs = GraphStream.open(
+        SketchConfig(depth=3, width_rows=64, width_cols=64),
+        ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 150, 1200).astype(np.uint32)
+    dst = rng.integers(0, 150, 1200).astype(np.uint32)
+    gs.ingest(src, dst, rng.integers(1, 5, 1200).astype(np.float32))
+    return gs, src, dst
+
+
+def _mixed_queries(rng, src, dst):
+    """A pool of queries spanning every family, with ragged batch sizes."""
+    pick = lambda n: np.asarray(rng.choice(src, n), np.uint32)
+    return [
+        Query.edge(pick(5), np.asarray(rng.choice(dst, 5), np.uint32)),
+        Query.edge(int(src[0]), int(dst[0])),
+        Query.in_flow(pick(3)),
+        Query.in_flow(int(dst[1])),
+        Query.out_flow(pick(7)),
+        Query.flow(pick(2)),
+        Query.heavy(pick(4), theta=10.0),
+        Query.heavy(int(src[2]), theta=3.0),
+        Query.reach(pick(3), np.asarray(rng.choice(dst, 3), np.uint32)),
+        Query.subgraph(src[:2], dst[:2]),
+        Query.subgraph(src[2:7], dst[2:7]),
+    ]
+
+
+def _oracle_value(q, sk, epoch):
+    """Answer one query with a FRESH engine (the per-family oracle path)."""
+    eng = QueryEngine("jnp")
+    u = None if q.u is None else jnp.asarray(q.u)
+    v = None if q.v is None else jnp.asarray(q.v)
+    if q.family == "edge":
+        out = np.asarray(eng.edge(sk, u, v))
+    elif q.family == "in_flow":
+        out = np.asarray(eng.in_flow(sk, u))
+    elif q.family == "out_flow":
+        out = np.asarray(eng.out_flow(sk, u))
+    elif q.family == "flow":
+        out = np.asarray(eng.flow(sk, u))
+    elif q.family == "heavy":
+        i, o = eng.heavy(sk, u, q.theta)
+        i, o = np.asarray(i), np.asarray(o)
+        return (i[0], o[0]) if q.scalar else (i, o)
+    elif q.family == "reach":
+        out = np.asarray(eng.reach(sk, u, v, epoch=epoch))
+    elif q.family == "subgraph":
+        return np.asarray(eng.subgraph(sk, u, v))
+    return out[0] if q.scalar else out
+
+
+def _assert_value_equal(got, want, msg):
+    if isinstance(want, tuple):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=msg)
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want), err_msg=msg)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_shuffled_mixed_batch_contract(loaded_stream, seed):
+    """THE acceptance property: a shuffled batch spanning >= 4 families
+    returns request-ordered results bit-identical to the per-family oracle,
+    with exactly one engine dispatch per family and config-derived (ε, δ)."""
+    gs, src, dst = loaded_stream
+    rng = np.random.default_rng(seed)
+    pool = _mixed_queries(rng, src, dst)
+    order = rng.permutation(len(pool))
+    batch = QueryBatch([pool[i] for i in order])
+    assert len(batch.families) >= 4
+
+    gs.engine.dispatches.clear()
+    results = gs.query(batch)
+
+    # request order: result i belongs to query i (identity — Query fields
+    # are numpy arrays, so == would be ambiguous)
+    assert all(r.query is q for r, q in zip(results, batch))
+    assert len(results) == len(batch)
+
+    # exactly one dispatch per family present (reach = reach_pre; the
+    # closure build is a separate amortized cache, not a query dispatch)
+    dispatch_key = {
+        "heavy": "heavy_vec",
+        "reach": "reach_pre",
+        "subgraph": "subgraph_batch",
+    }
+    want = {dispatch_key.get(f, f): 1 for f in batch.families}
+    assert dict(gs.engine.dispatches) == want
+
+    # bit-identity to the per-family oracle + (ε, δ) annotations
+    sk = gs.sketch
+    for i, r in enumerate(results):
+        _assert_value_equal(
+            r.value,
+            _oracle_value(r.query, sk, gs.epoch),
+            f"slot {i} family {r.family} (seed {seed})",
+        )
+        assert r.error == error_bound_for(r.family, gs.config)
+
+
+def test_mixed_batch_jit_cache_hit(loaded_stream):
+    """Re-running a same-shaped batch re-dispatches but never re-traces:
+    the engine's per-family jitted callables stay singletons and their
+    shape caches do not grow."""
+    gs, src, dst = loaded_stream
+    rng = np.random.default_rng(3)
+    batch = QueryBatch(_mixed_queries(rng, src, dst))
+    gs.query(batch)
+    jits_before = dict(gs.engine._jits)
+    sizes_before = {
+        f: fn._cache_size() for f, fn in jits_before.items()
+        if hasattr(fn, "_cache_size")
+    }
+    gs.engine.dispatches.clear()
+    gs.query(batch)
+    assert dict(gs.engine._jits) == jits_before  # same jitted callables
+    for f, fn in gs.engine._jits.items():
+        if hasattr(fn, "_cache_size") and f in sizes_before:
+            assert fn._cache_size() == sizes_before[f], f"re-trace in {f}"
+    assert all(v == 1 for v in gs.engine.dispatches.values())
+
+
+def test_subgraph_padding_is_exact(loaded_stream):
+    """Fusing ragged subgraph edge lists (mask padding) cannot change any
+    answer — including the revised absent-edge zero-propagation."""
+    gs, src, dst = loaded_stream
+    sk = gs.sketch
+    absent = Query.subgraph(
+        np.asarray([999_999], np.uint32), np.asarray([999_998], np.uint32)
+    )
+    qs = [
+        Query.subgraph(src[:1], dst[:1]),
+        Query.subgraph(src[:6], dst[:6]),
+        absent,
+    ]
+    results = gs.query(QueryBatch(qs))
+    for q, r in zip(qs, results):
+        want = queries.subgraph_query(sk, jnp.asarray(q.u), jnp.asarray(q.v))
+        np.testing.assert_array_equal(np.asarray(r.value), np.asarray(want))
+    assert float(results[2].value) == 0.0
+
+
+def test_string_labels_end_to_end():
+    gs = GraphStream.open("smoke", query_backend="jnp")
+    gs.ingest(["alice", "alice", "bob"], ["bob", "carol", "carol"])
+    res = gs.query(
+        Query.edge("alice", "bob"),
+        Query.in_flow("carol"),
+        Query.reach("alice", "carol"),
+    )
+    assert float(res[0].value) >= 1.0
+    assert float(res[1].value) >= 2.0
+    assert bool(res[2].value)
+    # the facade's codec and the scalar host hash agree
+    sk = gs.sketch
+    manual = queries.edge_query(
+        sk,
+        jnp.asarray([fnv1a_label("alice")], jnp.uint32),
+        jnp.asarray([fnv1a_label("bob")], jnp.uint32),
+    )
+    assert float(res[0].value) == float(manual[0])
+
+
+# ---------------------------------------------------------------------------
+# facade lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_open_presets_and_error_target():
+    assert GraphStream.open("smoke").config.width_rows == 256
+    gs = GraphStream.open(epsilon=0.01, delta=0.05)
+    assert gs.config == SketchConfig.for_error(0.01, 0.05)
+    with pytest.raises(ValueError):
+        GraphStream.open("nope")
+    with pytest.raises(ValueError):
+        GraphStream.open()
+
+
+def test_windowed_session_expiry():
+    gs = GraphStream.open(
+        SketchConfig(depth=3, width_rows=128, width_cols=128), window_slices=2
+    )
+    gs.ingest([10], [20])
+    assert float(gs.query(Query.edge(10, 20)).value) == 1.0
+    gs.advance_window()
+    gs.advance_window()  # wraps: slice holding (10,20) zeroed
+    assert float(gs.query(Query.edge(10, 20)).value) == 0.0
+
+
+def test_merge_linearity():
+    cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+    a = GraphStream.open(cfg, seed=5, query_backend="jnp")
+    b = GraphStream.open(cfg, seed=5, query_backend="jnp")
+    whole = GraphStream.open(cfg, seed=5, query_backend="jnp")
+    rng = np.random.default_rng(0)
+    s1, d1 = (rng.integers(0, 99, 300).astype(np.uint32) for _ in range(2))
+    s2, d2 = (rng.integers(0, 99, 300).astype(np.uint32) for _ in range(2))
+    a.ingest(s1, d1)
+    b.ingest(s2, d2)
+    whole.ingest(np.concatenate([s1, s2]), np.concatenate([d1, d2]))
+    a.merge(b)
+    np.testing.assert_array_equal(
+        np.asarray(a.sketch.counters), np.asarray(whole.sketch.counters)
+    )
+    mismatched = GraphStream.open(cfg, seed=6)
+    with pytest.raises(ValueError):
+        a.merge(mismatched)
+
+
+def test_checkpoint_restore_roundtrip(tmp_path):
+    cfg = SketchConfig(depth=2, width_rows=32, width_cols=32)
+    gs = GraphStream.open(cfg, checkpoint_dir=tmp_path, query_backend="jnp")
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 50, 200).astype(np.uint32)
+    dst = rng.integers(0, 50, 200).astype(np.uint32)
+    gs.ingest(src, dst)
+    step = gs.checkpoint()
+    want = gs.edge_frequency(src[:20], dst[:20])
+
+    fresh = GraphStream.open(cfg, checkpoint_dir=tmp_path, query_backend="jnp")
+    assert fresh.restore() == step
+    np.testing.assert_array_equal(fresh.edge_frequency(src[:20], dst[:20]), want)
+    # registers restored exactly (not refilled garbage)
+    np.testing.assert_array_equal(
+        np.asarray(fresh.sketch.row_flows),
+        np.asarray(jnp.sum(fresh.sketch.counters, axis=2)),
+    )
+
+
+def test_monitor_alarm_matches_core():
+    gs = GraphStream.open(SketchConfig(depth=3, width_rows=128, width_cols=128))
+    src = np.zeros(50, np.uint32)
+    dst = np.full(50, 7, np.uint32)
+    w = np.full(50, 10.0, np.float32)
+    assert not gs.monitor(src, dst, w, watch=7, theta=1000.0)
+    assert gs.monitor(src, dst, w, watch=7, theta=600.0)  # 500 already in
+    assert gs.stats.edges_ingested == 100
+
+
+@pytest.mark.slow
+def test_graphstream_mesh_matches_local():
+    """The facade's distributed plane (mesh=) answers exactly like a local
+    session — run in a subprocess with 8 placeholder host devices so the
+    rest of the suite keeps seeing 1 device."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from repro.api import GraphStream, Query, QueryBatch, SketchConfig
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = SketchConfig(depth=3, width_rows=64, width_cols=64)
+        dist = GraphStream.open(cfg, mesh=mesh, query_backend="jnp")
+        local = GraphStream.open(cfg, query_backend="jnp",
+                                 ingest_backend="scatter")
+
+        rng = np.random.default_rng(0)
+        src = rng.integers(0, 500, 256).astype(np.uint32)
+        dst = rng.integers(0, 500, 256).astype(np.uint32)
+        w = rng.integers(1, 4, 256).astype(np.float32)
+        dist.ingest(src, dst, w)
+        local.ingest(src, dst, w)
+
+        batch = QueryBatch([
+            Query.edge(src[:32], dst[:32]),
+            Query.in_flow(src[:16]),
+            Query.reach(src[:8], dst[:8]),
+        ])
+        got = dist.query(batch)
+        want = local.query(batch)
+        for g, wnt in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g.value),
+                                          np.asarray(wnt.value))
+        print("facade mesh session == local session")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "facade mesh session == local session" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# satellite: turnstile deletes resolve the ingest backend like updates
+# ---------------------------------------------------------------------------
+
+
+def test_delete_resolves_backend_through_engine(monkeypatch):
+    import importlib
+
+    # repro.core re-exports the ingest FUNCTION under the same name, so plain
+    # attribute imports shadow the module — resolve the module explicitly.
+    ingest_mod = importlib.import_module("repro.core.ingest")
+
+    hits = []
+    real = ingest_mod._BACKEND_FNS["onehot"]
+
+    def spy(*args, **kwargs):
+        hits.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setitem(ingest_mod._BACKEND_FNS, "onehot", spy)
+    monkeypatch.setenv("REPRO_INGEST_BACKEND", "onehot")
+
+    cfg = SketchConfig(depth=2, width_rows=32, width_cols=32)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    rng = np.random.default_rng(2)
+    src = jnp.asarray(rng.integers(0, 40, 100), jnp.uint32)
+    dst = jnp.asarray(rng.integers(0, 40, 100), jnp.uint32)
+    w = jnp.asarray(rng.integers(1, 4, 100), jnp.float32)
+
+    sk = sk.update(src, dst, w)          # auto -> env -> onehot
+    n_update = len(hits)
+    assert n_update > 0
+    sk = sk.delete(src[:30], dst[:30], w[:30])  # deletes take the same path
+    assert len(hits) > n_update
+
+    # semantics unchanged: delete == negative-weight scatter oracle
+    oracle = (
+        GLavaSketch.empty(cfg, jax.random.key(0))
+        .update(src, dst, w, backend="scatter")
+        .update(src[:30], dst[:30], -w[:30], backend="scatter")
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sk.counters), np.asarray(oracle.counters)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sk.row_flows), np.asarray(oracle.row_flows)
+    )
