@@ -11,8 +11,11 @@ CLI (the throughput-sweep mode, also run by CI as a smoke check):
 ``run()`` (the trajectory entry point) performs the full sweep so
 results/benchmarks.json records queries/sec per family (edge jnp + fused
 pallas, flow point queries from the registers, reach against the cached
-closure, subgraph) AND the mixed-batch planner figure alongside ingest
-edges/sec.
+closure, subgraph), the mixed-batch planner figure, AND the standing-
+subscription ticks/sec vs one-shot re-query figure (incremental closure
+refresh vs full rebuild) alongside ingest edges/sec; ``benchmarks.run``
+copies the query rows to BENCH_queries.json at the repo root as the
+cross-PR perf trajectory.
 """
 from __future__ import annotations
 
@@ -160,7 +163,7 @@ def bench_mixed_batch(smoke: bool = False):
         Query.edge(src[:q], dst[:q]),
         Query.in_flow(src[:q]),
         Query.out_flow(dst[:q]),
-        Query.heavy(src[: q // 4], theta=5.0),
+        Query.heavy(src[: q // 4], theta=0.01),
         Query.reach(src[: q // 8], dst[: q // 8]),
         Query.subgraph(src[:4], dst[:4]),
         Query.subgraph(src[4:12], dst[4:12]),
@@ -179,10 +182,92 @@ def bench_mixed_batch(smoke: bool = False):
     )
 
 
+def bench_subscription_ticks(smoke: bool = False, config=None):
+    """Standing-subscription serving rate vs. re-issuing the same batch as
+    one-shot pulls — the reach+flow mixed workload of the paper's
+    continuous-monitoring scenarios.  The subscription path compiles the
+    batch once and refreshes the reach closure INCREMENTALLY from each
+    ingest batch's touched rows; the one-shot baseline re-pays the full
+    O(w³ log w) closure rebuild per epoch.  Records ticks/sec for both and
+    the speedup (the subscription plane's acceptance figure)."""
+    from repro.api import GraphStream, Query, QueryBatch
+
+    width = 256 if smoke else 1024
+    cfg = config if config is not None else SketchConfig(4, width, width)
+    # Per-tick batches must stay below the incremental-refresh row-fraction
+    # budget (0.25·w) or both paths degenerate to full rebuilds.
+    tick_batch = max(16, int(cfg.width_rows * 0.15))
+    n_seed = 20_000 if smoke else 100_000
+    n_ticks = 4 if smoke else 6
+    rng = np.random.default_rng(0)
+    seed_src = rng.integers(0, n_seed, n_seed).astype(np.uint32)
+    seed_dst = rng.integers(0, n_seed, n_seed).astype(np.uint32)
+    ticks = [
+        (
+            rng.integers(0, n_seed, tick_batch).astype(np.uint32),
+            rng.integers(0, n_seed, tick_batch).astype(np.uint32),
+        )
+        for _ in range(n_ticks + 2)
+    ]
+    workload = QueryBatch([
+        Query.reach(seed_src[:64], seed_dst[:64]),
+        Query.in_flow(seed_src[:256]),
+        Query.out_flow(seed_dst[:256]),
+    ])
+
+    def session():
+        gs = GraphStream.open(cfg, ingest_backend="scatter", query_backend="jnp")
+        gs.ingest(seed_src, seed_dst)
+        return gs
+
+    import time as _time
+
+    # standing subscription: one full closure build (warm tick), then
+    # incremental refreshes only
+    gs = session()
+    sub = gs.subscribe(workload, every=1, name="bench")
+    gs.ingest(*ticks[0])  # warm tick 1: full closure build + query traces
+    gs.ingest(*ticks[1])  # warm tick 2: compiles the incremental refresh
+    t0 = _time.perf_counter()
+    for s, d in ticks[2:]:
+        gs.ingest(s, d)
+    sub_s = _time.perf_counter() - t0
+    assert sub.ticks == n_ticks + 2
+    full, inc = gs.engine.closure_refreshes, gs.engine.closure_incremental_refreshes
+
+    # baseline: re-issue the same batch as a one-shot pull per ingest batch
+    gs2 = session()
+    gs2.query(workload)  # warm: full build + jit traces
+    gs2.ingest(*ticks[0])
+    gs2.query(workload)
+    gs2.ingest(*ticks[1])
+    gs2.query(workload)
+    t0 = _time.perf_counter()
+    for s, d in ticks[2:]:
+        gs2.ingest(s, d)
+        gs2.query(workload)
+    oneshot_s = _time.perf_counter() - t0
+
+    record(
+        "subscription_ticks",
+        sub_s / n_ticks * 1e6,
+        width=cfg.width_rows,
+        tick_batch=tick_batch,
+        ticks_per_s=round(n_ticks / sub_s, 2),
+        oneshot_per_s=round(n_ticks / oneshot_s, 2),
+        speedup_vs_oneshot=round(oneshot_s / sub_s, 2),
+        closure_full=full,
+        closure_incremental=inc,
+        note="reach+flow standing workload; subscription = incremental "
+        "closure refresh, baseline = full rebuild per re-query",
+    )
+
+
 def run(smoke: bool = False):
     bench_reachability_precision()
     bench_subgraph_semantics()
     bench_query_throughput(smoke=smoke)
+    bench_subscription_ticks(smoke=smoke)
 
 
 def main():
@@ -196,9 +281,26 @@ def main():
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the recorded rows as JSON (CI uploads "
                     "the smoke sweep as a build artifact)")
+    ap.add_argument("--preset", default=None,
+                    choices=["smoke", "base", "web"],
+                    help="run the subscription-ticks figure on a paper "
+                    "preset (base/web sizes want a TPU host — the closure "
+                    "rebuild baseline is O(w^3 log w); nonsquare is "
+                    "excluded: the workload's reach family needs a square "
+                    "sketch)")
     args = ap.parse_args()
-    if args.throughput_only:
+    if args.preset:
+        from repro.configs import glava
+
+        cfg = {
+            "smoke": glava.SMOKE,
+            "base": glava.BASE,
+            "web": glava.WEB,
+        }[args.preset]
+        bench_subscription_ticks(smoke=args.smoke, config=cfg)
+    elif args.throughput_only:
         bench_query_throughput(smoke=args.smoke)
+        bench_subscription_ticks(smoke=args.smoke)
     else:
         run(smoke=args.smoke)
     if args.json:

@@ -1,7 +1,9 @@
 """Benchmark harness — one section per validatable paper claim (the paper
 has no experimental tables; Thm 1, Lemma 5.2, Sections 3.2/4.3/4.4/6.1.2 are
-the claims).  Prints ``name,us_per_call,derived`` CSV rows and writes
-results/benchmarks.json.
+the claims).  Prints ``name,us_per_call,derived`` CSV rows, writes
+results/benchmarks.json (all sections), and writes the query-plane rows to
+BENCH_queries.json at the REPO ROOT — the perf-trajectory file tracking
+queries/sec per family and the subscription ticks/sec figure across PRs.
 """
 from __future__ import annotations
 
@@ -9,6 +11,8 @@ import json
 import os
 import time
 from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
@@ -23,20 +27,30 @@ def main() -> None:
     from benchmarks.common import ROWS
 
     print("name,us_per_call,derived")
+    section_rows = {}
     for section in (
         ("accuracy (Thm1/Lemma5.2/equal-space/nonsquare/CU)", bench_accuracy.run),
-        ("queries (reach/subgraph/throughput)", bench_queries.run),
+        ("queries (reach/subgraph/throughput/subscriptions)", bench_queries.run),
         ("ingest (Section 3.2 constraints)", bench_ingest.run),
         ("compression (sketched all-reduce)", bench_compression.run),
         ("kernels (pallas vs ref)", bench_kernels.run),
     ):
         name, fn = section
         print(f"# --- {name} ---")
+        start = len(ROWS)
         fn()
+        section_rows[name.split(" ", 1)[0]] = ROWS[start:]
     out = Path("results")
     out.mkdir(exist_ok=True)
     (out / "benchmarks.json").write_text(json.dumps(ROWS, indent=1))
-    print(f"# done: {len(ROWS)} rows in {time.time()-t0:.1f}s -> results/benchmarks.json")
+    # The query-plane trajectory lives at the repo root so successive PRs
+    # leave a comparable perf record (ticks/sec, qps per family).
+    bench_q = REPO_ROOT / "BENCH_queries.json"
+    bench_q.write_text(json.dumps(section_rows.get("queries", []), indent=1))
+    print(
+        f"# done: {len(ROWS)} rows in {time.time()-t0:.1f}s -> "
+        f"results/benchmarks.json + {bench_q}"
+    )
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
-"""DoS monitoring (the paper's flagship point-query application,
-Section 3.4): watch f̃_v(target, ←) > θ in real time over a packet stream
-with an injected volumetric attack, using the Section 4.2 three-step
-monitor — all through the :class:`repro.api.GraphStream` facade.
+"""DoS monitoring (the paper's flagship continuous application,
+Section 3.4): watch host TARGET's in-flow share of total traffic in real
+time over a packet stream with an injected volumetric attack — as a
+STANDING SUBSCRIPTION: the threshold query is registered once, compiled
+once by the planner, and re-evaluated automatically after every ingest
+batch, emitting timestamped alarm events.  θ is the heavy-hitter fraction
+of total stream weight (paper-style relative threshold).
 
 Run: PYTHONPATH=src python examples/ddos_monitor.py
 """
@@ -11,12 +14,23 @@ from repro.api import GraphStream, Query, SketchConfig
 
 N_HOSTS = 20_000
 TARGET = 4242
-THETA = 2_000.0
+THETA = 0.10  # alarm when the target draws > 10% of ALL traffic
 
 gs = GraphStream.open(SketchConfig(depth=4, width_rows=1024, width_cols=1024))
 rng = np.random.default_rng(0)
 
-print(f"[ddos] monitoring host {TARGET}: alarm when f̃_v(target,←) > {THETA:,.0f}")
+print(f"[ddos] monitoring host {TARGET}: alarm when f̃_v(target,←) > {THETA:.0%} of F̃")
+
+# The standing query: heavy-hitter check + the raw in-flow estimate, with
+# an alarm predicate on the in-flow bit.  every=1 → one event per batch.
+sub = gs.subscribe(
+    Query.heavy(TARGET, THETA),
+    Query.in_flow(TARGET),
+    every=1,
+    alarm=lambda results: bool(np.asarray(results[0].value[0])),
+    name="ddos-watch",
+)
+
 attack_started = None
 alarm_at = None
 for t in range(40):
@@ -32,15 +46,18 @@ for t in range(40):
         dst = np.concatenate([dst, np.full(3000, TARGET, np.uint32)])
         nbytes = np.concatenate([nbytes, np.full(3000, 1.4, np.float32)])
 
-    # the paper's 3-step monitor: estimate, alarm, ingest — one facade call
-    alarm = gs.monitor(src, dst, nbytes, watch=TARGET, theta=THETA)
-    est = float(gs.query(Query.in_flow(TARGET)).value)
-    flag = "ALARM" if alarm else "     "
-    if t % 5 == 0 or alarm and alarm_at is None:
+    # ingest drives the subscription: the standing query re-evaluates and
+    # emits one event for this batch
+    gs.ingest(src, dst, nbytes)
+    (event,) = sub.poll()
+    est = float(np.asarray(event.results[1].value))
+    flag = "ALARM" if event.alarm else "     "
+    if t % 5 == 0 or (event.alarm and alarm_at is None):
         print(f"[ddos] t={t:02d} {flag} f̃_v(target,←)={est:10.1f}")
-    if alarm and alarm_at is None:
+    if event.alarm and alarm_at is None:
         alarm_at = t
 
 assert attack_started is not None and alarm_at is not None
+assert sub.ticks == 40
 print(f"[ddos] attack at t={attack_started}, alarm at t={alarm_at} "
       f"(detection lag {alarm_at - attack_started} batches)")

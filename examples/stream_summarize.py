@@ -51,7 +51,7 @@ def main():
         est_r, _, _ = gs.query(QueryBatch([
             Query.edge(qs, qd),
             Query.heavy(np.arange(0, 128, dtype=np.uint32),
-                        theta=float(hi - lo) / 50),
+                        theta=0.02),  # heavy = > 2% of total stream weight
             Query.reach(qs[:32], qd[:32]),
         ]))
         est = np.asarray(est_r.value)

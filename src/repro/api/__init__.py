@@ -9,6 +9,11 @@ One import gives callers the whole paper surface:
   query IR: queries are data; heterogeneous batches are planned into at
   most one engine dispatch per family and answered in request order with
   (ε, δ) :class:`ErrorBound` annotations.
+- :class:`Subscription` / :class:`SubscriptionEvent` — the standing-query
+  plane: ``gs.subscribe(...)`` registers a batch compiled once and
+  re-evaluated incrementally after every k-th mutation, emitting
+  timestamped events (``sub.poll()`` / ``gs.events()`` / callbacks);
+  ``gs.monitor`` is a thin threshold-subscription wrapper.
 - :func:`encode_labels` / :func:`fnv1a_labels` — the vectorized key codec
   (str/int node labels -> uint32 keys) applied at this boundary.
 - :class:`SketchConfig` — re-exported so callers can size summaries
@@ -19,7 +24,7 @@ sketch algebra), but every user-facing entry point — serving engine,
 launch driver, examples, benchmarks — routes through this package.
 """
 from repro.api.codec import encode_label, encode_labels
-from repro.api.planner import execute, plan
+from repro.api.planner import CompiledPlan, compile_batch, execute, plan
 from repro.api.query import (
     FAMILIES,
     ErrorBound,
@@ -27,24 +32,32 @@ from repro.api.query import (
     QueryBatch,
     QueryResult,
     error_bound_for,
+    validate_theta,
 )
-from repro.api.stream import GraphStream, StreamStats
+from repro.api.stream import GraphStream, IngestReceipt, StreamStats
+from repro.api.subscription import Subscription, SubscriptionEvent
 from repro.core.hashing import fnv1a_labels
 from repro.core.sketch import SketchConfig
 
 __all__ = [
     "FAMILIES",
+    "CompiledPlan",
     "ErrorBound",
     "GraphStream",
+    "IngestReceipt",
     "Query",
     "QueryBatch",
     "QueryResult",
     "SketchConfig",
     "StreamStats",
+    "Subscription",
+    "SubscriptionEvent",
+    "compile_batch",
     "encode_label",
     "encode_labels",
     "error_bound_for",
     "execute",
     "fnv1a_labels",
     "plan",
+    "validate_theta",
 ]

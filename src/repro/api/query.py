@@ -9,7 +9,7 @@ workload expressible: each supported family is a :class:`Query` constructor
     Query.in_flow(n)          f̃_v(n, ←)             aggregate in-flow
     Query.out_flow(n)         f̃_v(n, →)             aggregate out-flow
     Query.flow(n)             f̃_v(n, ⊥ / total)     total incident flow
-    Query.heavy(n, θ)         f̃_v(n) > θ            heavy-hitter check
+    Query.heavy(n, θ)         f̃_v(n) > θ·F̃          heavy-hitter check (θ ∈ (0,1])
     Query.reach(u, v)         r̃(u → v)              reachability
     Query.subgraph(us, vs)    f̃({(us_i, vs_i)})     aggregate subgraph
 
@@ -68,6 +68,24 @@ def error_bound_for(family: str, config) -> ErrorBound:
     if family in _COUNT_FAMILIES:
         return ErrorBound(epsilon=eps, delta=delta, side="over-estimate")
     return ErrorBound(epsilon=None, delta=delta, side="no-false-negative")
+
+
+def validate_theta(theta) -> float:
+    """Validate a heavy-hitter / monitor threshold θ: a FRACTION of the
+    total stream weight F̃, so ``0 < θ <= 1`` (and finite — a NaN θ would
+    otherwise compare false everywhere and silently report nothing heavy).
+    Raises a clear ``ValueError``; shared by ``Query.heavy``,
+    ``GraphStream.monitor``, and subscription construction."""
+    try:
+        theta = float(theta)
+    except (TypeError, ValueError):
+        raise ValueError(f"theta must be a real number, got {theta!r}")
+    if not (0.0 < theta <= 1.0):  # also rejects NaN (all comparisons false)
+        raise ValueError(
+            "theta is the heavy-hitter fraction of the total stream weight "
+            f"F and must satisfy 0 < theta <= 1, got {theta!r}"
+        )
+    return theta
 
 
 def _encode_batchable(labels) -> Tuple[np.ndarray, bool]:
@@ -130,10 +148,12 @@ class Query:
 
     @staticmethod
     def heavy(n, theta: float) -> "Query":
-        """Heavy-hitter check: is f̃_v(n) > θ (in- and out-flow)?  The answer
-        is an (in_heavy, out_heavy) boolean pair per node."""
+        """Heavy-hitter check: is f̃_v(n) > θ·F̃ (in- and out-flow), with θ a
+        FRACTION of the total stream weight F̃ in (0, 1] (validated — a
+        clear ValueError beats silently-all-false bits from a nonsense θ)?
+        The answer is an (in_heavy, out_heavy) boolean pair per node."""
         k, s = _encode_batchable(n)
-        return Query("heavy", k, theta=float(theta), scalar=s)
+        return Query("heavy", k, theta=validate_theta(theta), scalar=s)
 
     @staticmethod
     def reach(u, v) -> "Query":

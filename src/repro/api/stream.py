@@ -5,18 +5,29 @@ queries over one stream.  `GraphStream` is that object for callers: it
 wraps the ingest plane (:class:`~repro.core.ingest.IngestEngine`, double-
 buffered batched dispatch), the query plane (:class:`~repro.core.
 query_engine.QueryEngine`, planned + fused by :mod:`repro.api.planner`),
-and the optional sliding window (:class:`~repro.core.window.
-SlidingWindowSketch`), distributed plane (`mesh=`), and
-:class:`~repro.checkpoint.manager.CheckpointManager` behind one handle::
+the standing-query plane (:mod:`repro.api.subscription`), and the optional
+sliding window (:class:`~repro.core.window.SlidingWindowSketch`),
+distributed plane (`mesh=`), and :class:`~repro.checkpoint.manager.
+CheckpointManager` behind one handle::
 
     from repro.api import GraphStream, Query
 
     gs = GraphStream.open("smoke")           # or a SketchConfig / (ε, δ)
     gs.ingest(["alice", "bob"], ["bob", "carol"])      # labels, not keys
+
+    # one-shot pull
     res = gs.query(Query.edge("alice", "bob"),
                    Query.in_flow("bob"),
                    Query.reach("alice", "carol"))
     print(res[0].value, res[0].error)        # (ε, δ)-annotated estimate
+
+    # standing subscription: compiled once, re-evaluated incrementally
+    # after every 4th mutation, results as timestamped events
+    sub = gs.subscribe(Query.reach("alice", "carol"),
+                       Query.in_flow("carol"), every=4)
+    gs.ingest(more_src, more_dst)
+    for event in sub.poll():
+        print(event.tick, event.results)
 
 Node labels (str/int) are encoded exactly once at this boundary by the
 vectorized key codec (:mod:`repro.api.codec`); everything below speaks
@@ -29,7 +40,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,23 +48,42 @@ import numpy as np
 
 from repro.api.codec import encode_labels
 from repro.api.planner import execute
-from repro.api.query import ErrorBound, Query, QueryBatch, QueryResult, error_bound_for
+from repro.api.query import (
+    ErrorBound,
+    Query,
+    QueryBatch,
+    QueryResult,
+    error_bound_for,
+    validate_theta,
+)
+from repro.api.subscription import (
+    DEFAULT_MAX_PENDING,
+    Subscription,
+    SubscriptionEvent,
+)
 from repro.core import queries as queries_mod
-from repro.core.ingest import resolve_backend
+from repro.core.ingest import resolve_backend, touched_row_keys
 from repro.core.query_engine import QueryEngine
 from repro.core.sketch import GLavaSketch, SketchConfig
 from repro.core.window import SlidingWindowSketch
 
+# Session-wide event feed bound (per-subscription queues have their own);
+# when nobody drains ``gs.events()`` the oldest entries drop.
+EVENT_LOG_MAXLEN = 4096
+
 
 @dataclasses.dataclass
 class StreamStats:
-    """Session counters (ingest/query throughput, closure refreshes)."""
+    """Session counters (ingest/query throughput, closure refreshes,
+    subscription ticks)."""
 
     edges_ingested: int = 0
     ingest_s: float = 0.0
     queries_served: int = 0
     query_s: float = 0.0
     closure_refreshes: int = 0
+    closure_incremental_refreshes: int = 0
+    subscription_ticks: int = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -62,7 +92,25 @@ class StreamStats:
             "queries_served": self.queries_served,
             "queries_per_s": self.queries_served / max(self.query_s, 1e-9),
             "closure_refreshes": self.closure_refreshes,
+            "closure_incremental_refreshes": self.closure_incremental_refreshes,
+            "subscription_ticks": self.subscription_ticks,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestReceipt:
+    """What one ``ingest`` call did: the post-batch epoch, the batch size,
+    and the batch's touched-key set — the unique uint32 node keys whose
+    sketch ROWS the batch wrote.  ``None`` means "no usable delta": the
+    batch carried negative weights (not additions-only), overflowed the
+    row-width tracking cap, or the session had already stopped tracking
+    (a prior non-additive mutation with no closure sync since).  The
+    subscription plane feeds non-``None`` sets to the incremental closure
+    refresh; ``None`` forces the next refresh to rebuild from scratch."""
+
+    epoch: int
+    n_edges: int
+    touched_keys: Optional[np.ndarray]
 
 
 def _preset(name: str) -> SketchConfig:
@@ -116,6 +164,18 @@ class GraphStream:
         self.stats = StreamStats()
         self._mesh = mesh
         self._epoch = 0
+        # Standing-query plane: registered subscriptions, the session-wide
+        # event feed, and the touched-key accumulator feeding the
+        # incremental closure refresh (None = "not additions-only since the
+        # last closure sync; full rebuild required").
+        self._subs: Dict[int, Subscription] = {}
+        self._next_sub_id = 0
+        self._event_log: collections.deque = collections.deque(
+            maxlen=EVENT_LOG_MAXLEN
+        )
+        self._touched: Optional[List[np.ndarray]] = []
+        self._touched_count = 0
+        self._monitor_subs: Dict[Tuple[int, float], Subscription] = {}
         # Double-buffered ingest: JAX dispatch is async, so staging the next
         # host batch overlaps the device accumulating the previous one; the
         # deque bounds how many un-materialized updates may be in flight.
@@ -179,14 +239,22 @@ class GraphStream:
 
     # -- ingest ---------------------------------------------------------------
 
-    def ingest(self, src, dst, weights=None) -> None:
+    def ingest(self, src, dst, weights=None) -> IngestReceipt:
         """Fold one edge batch into the summary.  ``src``/``dst`` are label
         batches (str or int — encoded here by the key codec); returns as
         soon as the device accepts the batch (double-buffered; call
-        :meth:`flush` or any query to synchronize)."""
+        :meth:`flush` or any query to synchronize) — UNLESS a subscription
+        comes due on this mutation, in which case the batch lands and the
+        standing queries re-evaluate before returning.
+
+        Returns an :class:`IngestReceipt` carrying the batch's touched-key
+        set (the rows it wrote) — the delta the incremental closure refresh
+        consumes."""
         t0 = time.time()
-        s = jnp.asarray(np.atleast_1d(encode_labels(src)))
-        d = jnp.asarray(np.atleast_1d(encode_labels(dst)))
+        s_np = np.atleast_1d(encode_labels(src))
+        d_np = np.atleast_1d(encode_labels(dst))
+        s = jnp.asarray(s_np)
+        d = jnp.asarray(d_np)
         if s.shape != d.shape:
             raise ValueError(f"src/dst shape mismatch: {s.shape} vs {d.shape}")
         w = (
@@ -194,6 +262,21 @@ class GraphStream:
             if weights is None
             else jnp.asarray(weights, jnp.float32)
         )
+        # Only pay the host-side unique/sign scans while a touched-key
+        # delta can still be consumed; once tracking is poisoned (prior
+        # delete / overflow, no closure sync since) the set is discarded
+        # anyway and the hot ingest path skips it entirely.
+        touched = None
+        if self._touched is not None:
+            additive = weights is None or not bool(
+                np.any(np.asarray(weights) < 0)
+            )
+            if additive:
+                touched = touched_row_keys(
+                    s_np,
+                    None if self.config.directed else d_np,
+                    cap=self.config.width_rows,
+                )
         if self._mesh is not None:
             from repro.core.distributed import distributed_ingest
 
@@ -211,12 +294,20 @@ class GraphStream:
         self.stats.edges_ingested += int(s.shape[0])
         self.stats.ingest_s += time.time() - t0
         self._epoch += 1
+        self._note_touched(touched)
+        receipt = IngestReceipt(
+            epoch=self._epoch, n_edges=int(s.shape[0]), touched_keys=touched
+        )
+        self._after_mutation()
+        return receipt
 
-    def delete(self, src, dst, weights=None) -> None:
-        """Turnstile deletion: negative-weight ingest (paper Section 6.1.1)."""
+    def delete(self, src, dst, weights=None) -> IngestReceipt:
+        """Turnstile deletion: negative-weight ingest (paper Section 6.1.1).
+        Not additions-only, so the receipt's touched set is ``None`` and any
+        cached reachability closure rebuilds from scratch on next use."""
         if weights is None:
             weights = np.ones(len(np.atleast_1d(np.asarray(src))), np.float32)
-        self.ingest(src, dst, -np.asarray(weights))
+        return self.ingest(src, dst, -np.asarray(weights))
 
     def flush(self) -> None:
         """Block until every dispatched ingest batch has landed on device."""
@@ -241,37 +332,175 @@ class GraphStream:
             batch = queries[0]
         else:
             batch = QueryBatch(queries)
+        if len(batch) == 0:
+            # Nothing to answer: do not flush, plan, or touch the engine.
+            return []
         self.flush()
         t0 = time.time()
         results = execute(self.engine, self._live(), batch, epoch=self._epoch)
         self.stats.query_s += time.time() - t0
+        self._count_served(results)
+        self._sync_engine_stats()
+        return results[0] if single else results
+
+    # -- standing queries (subscriptions) -------------------------------------
+
+    def subscribe(
+        self,
+        *queries,
+        every: int = 1,
+        on_result: Optional[Callable[[SubscriptionEvent], None]] = None,
+        alarm: Optional[Callable[[List[QueryResult]], bool]] = None,
+        name: Optional[str] = None,
+        max_pending: int = DEFAULT_MAX_PENDING,
+    ) -> Subscription:
+        """Register a standing query batch: a :class:`QueryBatch` (or Query
+        arguments, like :meth:`query`) compiled ONCE by the planner and
+        re-evaluated automatically after every ``every``-th mutation
+        (ingest / delete / advance_window / merge), emitting timestamped
+        :class:`SubscriptionEvent`\\ s through ``Subscription.poll()``, the
+        session-wide :meth:`events` feed, and the optional ``on_result``
+        callback.  ``alarm`` is a predicate over the request-ordered result
+        list whose value rides on each event (threshold monitors).
+
+        Re-evaluation is INCREMENTAL: flow/heavy families read the
+        maintained registers, edge/subgraph plans replay their fused
+        jit-cached dispatches, and reach subscriptions refresh the cached
+        transitive closure from the rows touched since the last tick
+        (``QueryEngine.refresh_closure``) instead of re-squaring — one full
+        closure build per additions-only stream, N incremental refreshes."""
+        if len(queries) == 1 and isinstance(queries[0], QueryBatch):
+            batch = queries[0]
+        else:
+            batch = QueryBatch(queries)
+        for q in batch:
+            if q.family == "heavy":
+                validate_theta(q.theta)
+        sub = Subscription(
+            self,
+            self._next_sub_id,
+            batch,
+            every=every,
+            on_result=on_result,
+            alarm=alarm,
+            name=name,
+            max_pending=max_pending,
+        )
+        self._next_sub_id += 1
+        self._subs[sub.id] = sub
+        return sub
+
+    @property
+    def subscriptions(self) -> Tuple[Subscription, ...]:
+        """The active subscriptions, registration-ordered."""
+        return tuple(self._subs.values())
+
+    def events(self) -> Iterator[SubscriptionEvent]:
+        """Drain the session-wide event feed (all subscriptions, emission
+        order).  Non-blocking: yields the pending events and stops."""
+        while self._event_log:
+            yield self._event_log.popleft()
+
+    def _unsubscribe(self, sub: Subscription) -> None:
+        self._subs.pop(sub.id, None)
+
+    def _note_touched(self, batch_keys: Optional[np.ndarray]) -> None:
+        """Accumulate one batch's touched keys for the next closure sync;
+        ``None`` (non-additive batch) or overflowing the row width forces
+        the next sync to rebuild from scratch."""
+        if self._touched is None:
+            return
+        if batch_keys is None:
+            self._touched = None
+            self._touched_count = 0
+            return
+        self._touched.append(batch_keys)
+        self._touched_count += int(batch_keys.size)
+        if self._touched_count > self.config.width_rows:
+            self._touched = None
+            self._touched_count = 0
+
+    def _ensure_closure(self) -> None:
+        """Bring the engine's closure cache up to the current epoch — by
+        touched-row refresh when the history since the last sync is
+        additions-only, else by full rebuild."""
+        keys: Optional[np.ndarray] = None
+        if self._touched is not None:
+            keys = (
+                np.unique(np.concatenate(self._touched)).astype(np.uint32)
+                if self._touched
+                else np.zeros(0, np.uint32)
+            )
+        self.engine.refresh_closure(self._live(), keys, self._epoch)
+        self._touched = []
+        self._touched_count = 0
+
+    def _after_mutation(self) -> None:
+        """Re-evaluate every subscription that came due on this mutation."""
+        due = [
+            s for s in list(self._subs.values()) if s.active and s._note_mutation()
+        ]
+        if not due:
+            return
+        self.flush()
+        t0 = time.time()
+        if any(s.plan.has_reach for s in due):
+            self._ensure_closure()
+        sketch = self._live()
+        now = time.time()
+        for sub in due:
+            results = sub.plan.run(self.engine, sketch, epoch=self._epoch)
+            event = SubscriptionEvent(
+                subscription_id=sub.id,
+                name=sub.name,
+                tick=sub.ticks + 1,
+                epoch=self._epoch,
+                timestamp=now,
+                results=tuple(results),
+                alarm=None if sub.alarm is None else bool(sub.alarm(results)),
+            )
+            sub._deliver(event)
+            self._event_log.append(event)
+            self.stats.subscription_ticks += 1
+            self._count_served(results)
+        self.stats.query_s += time.time() - t0
+        self._sync_engine_stats()
+
+    def _count_served(self, results) -> None:
         for r in results:
             v = r.value
             self.stats.queries_served += (
                 int(np.size(v[0])) if isinstance(v, tuple) else int(np.size(v))
             )
+
+    def _sync_engine_stats(self) -> None:
         self.stats.closure_refreshes = self.engine.closure_refreshes
-        return results[0] if single else results
+        self.stats.closure_incremental_refreshes = (
+            self.engine.closure_incremental_refreshes
+        )
 
     def monitor(self, src, dst, weights, watch, theta: float) -> bool:
-        """Paper Section 4.2's three-step real-time monitor: estimate the
-        watched node's in-flow, alarm if this batch pushes it over θ, then
-        ingest the batch.  Returns the alarm decision."""
-        if self._window is not None:
-            raise ValueError("monitor() runs on non-windowed sessions")
-        self.flush()
-        t0 = time.time()
-        s = jnp.asarray(np.atleast_1d(encode_labels(src)))
-        d = jnp.asarray(np.atleast_1d(encode_labels(dst)))
-        w = jnp.asarray(weights, jnp.float32)
-        watch_key = jnp.asarray(np.uint32(encode_labels(watch)))
-        alarm, self._sketch = queries_mod.monitor_step(
-            self._sketch, s, d, w, watch_key, theta
-        )
-        self.stats.edges_ingested += int(s.shape[0])
-        self.stats.ingest_s += time.time() - t0
-        self._epoch += 1
-        return bool(alarm)
+        """Paper Section 4.2's real-time monitor as a thin wrapper over a
+        threshold subscription: a standing ``Query.heavy(watch, θ)`` with an
+        ``alarm`` predicate on the in-flow bit, registered once per
+        (watch, θ) and evaluated right after this batch is ingested.  θ is
+        the fraction of the total stream weight F̃ (``0 < θ <= 1``,
+        validated).  Returns the alarm decision; the subscription keeps
+        monitoring subsequent ingests (events via :meth:`events`)."""
+        theta = validate_theta(theta)
+        key = (int(np.uint32(encode_labels(watch))), theta)
+        sub = self._monitor_subs.get(key)
+        if sub is None or not sub.active:
+            sub = self.subscribe(
+                Query.heavy(watch, theta),
+                every=1,
+                alarm=lambda results: bool(np.asarray(results[0].value[0])),
+                name=f"monitor:{key[0]}@{theta:g}",
+            )
+            self._monitor_subs[key] = sub
+        self.ingest(src, dst, weights)
+        sub.poll()  # the wrapper consumes its events; last_event remains
+        return bool(sub.last_event.alarm)
 
     def pagerank(self, damping: float = 0.85, iters: int = 32) -> np.ndarray:
         """Run PageRank directly on the summary-as-a-graph (Section 3.3
@@ -304,11 +533,15 @@ class GraphStream:
 
     def advance_window(self) -> None:
         """Move the sliding window to the next time slice (expiring the
-        oldest slice); no-op for non-windowed sessions."""
+        oldest slice); no-op for non-windowed sessions.  Counts as a
+        mutation for subscriptions; expiry removes edges, so any cached
+        reachability closure rebuilds from scratch on next use."""
         if self._window is not None:
             self.flush()
             self._window = self._window.advance()
             self._epoch += 1
+            self._note_touched(None)
+            self._after_mutation()
 
     def merge(self, other: "GraphStream") -> "GraphStream":
         """Merge another session's summary into this one (linearity; the
@@ -326,6 +559,8 @@ class GraphStream:
         self._sketch = self._sketch.merge(other._sketch)
         self.stats.edges_ingested += other.stats.edges_ingested
         self._epoch += 1
+        self._note_touched(None)  # foreign rows everywhere: full rebuild
+        self._after_mutation()
         return self
 
     def checkpoint(self, step: Optional[int] = None) -> int:
@@ -364,6 +599,8 @@ class GraphStream:
             self._sketch = state
         self._epoch = int(meta.get("epoch", meta["step"]))
         self.engine.invalidate()  # any cached closure predates the restore
+        self._touched = []
+        self._touched_count = 0
         return int(meta["step"])
 
     def summary(self) -> Dict[str, float]:

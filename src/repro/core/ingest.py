@@ -51,6 +51,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_CHUNK = 2048
 BACKENDS = ("scatter", "onehot", "pallas")
@@ -69,6 +70,25 @@ def resolve_backend(backend: Optional[str]) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"unknown ingest backend: {backend!r} (want {BACKENDS})")
     return backend
+
+
+def touched_row_keys(src, dst=None, cap: Optional[int] = None):
+    """The unique uint32 node keys whose ROW buckets one ingest batch can
+    touch — ``src`` always; ``dst`` too when the sketch mirrors edges
+    (undirected ingest writes row h(dst) as well).  Feeds the query plane's
+    incremental closure refresh (``QueryEngine.refresh_closure``), which
+    only needs a SUPERSET of the changed rows.
+
+    Returns ``None`` when the unique count exceeds ``cap`` (typically the
+    sketch row width): past that the refresh would touch most rows anyway,
+    so callers fall back to a full rebuild rather than carry the set."""
+    keys = np.atleast_1d(np.asarray(src))
+    if dst is not None:
+        keys = np.concatenate([keys, np.atleast_1d(np.asarray(dst))])
+    uniq = np.unique(keys.astype(np.uint32, copy=False))
+    if cap is not None and uniq.size > cap:
+        return None
+    return uniq
 
 
 def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:

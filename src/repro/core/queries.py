@@ -169,6 +169,30 @@ def check_heavy_keys_vec(sketch: GLavaSketch, keys: jax.Array, thetas: jax.Array
     return node_in_flow(sketch, keys) > thetas, node_out_flow(sketch, keys) > thetas
 
 
+def stream_total_weight(sketch: GLavaSketch) -> jax.Array:
+    """F̃ — the total stream weight estimate (the (*, *) wildcard): exact
+    from any single sketch in the integer regime; min over sketches is the
+    paper's estimator.  An O(d·w_r) register reduction."""
+    return jnp.min(jnp.sum(sketch.row_flows, axis=1))
+
+
+def check_heavy_keys_rel_vec(
+    sketch: GLavaSketch, keys: jax.Array, thetas: jax.Array
+):
+    """RELATIVE heavy-hitter check — the API plane's θ semantics: a node is
+    heavy when its flow exceeds the fraction ``θ ∈ (0, 1]`` of the total
+    stream weight F̃ (:func:`stream_total_weight`), the paper's workload-
+    independent heavy-hitter definition.  ``thetas`` is a per-query (Q,)
+    fraction array (padded lanes compare against 0·F̃ and are sliced away by
+    the engine).  The core absolute-threshold path
+    (:func:`check_heavy_keys`) remains for callers that track F themselves.
+    """
+    cut = thetas.astype(jnp.float32) * stream_total_weight(sketch).astype(
+        jnp.float32
+    )
+    return node_in_flow(sketch, keys) > cut, node_out_flow(sketch, keys) > cut
+
+
 def wildcard_edge_query(
     sketch: GLavaSketch,
     src: Optional[jax.Array],

@@ -34,6 +34,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import queries, reach
 from repro.core.sketch import GLavaSketch
@@ -41,6 +42,14 @@ from repro.core.sketch import GLavaSketch
 QUERY_BACKENDS = ("jnp", "pallas")
 DEFAULT_PAD_Q = 256
 DEFAULT_CHUNK_Q = 16384
+# Incremental-closure hygiene: touched-row batches pad to multiples of this
+# (few jit shapes), refreshes fall back to a full rebuild when a batch
+# touches more than CLOSURE_REFRESH_FRAC of the rows (the O(T·w²) refresh
+# stops winning) or after CLOSURE_STALENESS_BUDGET incremental refreshes
+# since the last full build (perf hygiene — the refresh itself is exact).
+CLOSURE_REFRESH_PAD_T = 64
+CLOSURE_REFRESH_FRAC = 0.25
+CLOSURE_STALENESS_BUDGET = 256
 
 
 def resolve_query_backend(backend: Optional[str]) -> str:
@@ -88,6 +97,10 @@ _FAMILIES: Dict[str, Tuple[Callable, Callable]] = {
     "flow": (queries.node_flow, queries.node_flow),
     "heavy": (queries.check_heavy_keys, queries.check_heavy_keys),
     "heavy_vec": (queries.check_heavy_keys_vec, queries.check_heavy_keys_vec),
+    "heavy_rel_vec": (
+        queries.check_heavy_keys_rel_vec,
+        queries.check_heavy_keys_rel_vec,
+    ),
     "subgraph": (queries.subgraph_query, queries.subgraph_query),
     "subgraph_opt": (queries.subgraph_query_opt, queries.subgraph_query_opt),
     "subgraph_batch": (queries.subgraph_query_batch, queries.subgraph_query_batch),
@@ -96,6 +109,9 @@ _FAMILIES: Dict[str, Tuple[Callable, Callable]] = {
         reach.reach_query_precomputed,
     ),
     "closure": (reach.transitive_closure, _pallas_closure),
+    # The touched-row refresh is small-matmul work XLA handles well on any
+    # backend; the pallas closure kernel only pays off for full rebuilds.
+    "closure_refresh": (reach.closure_refresh, reach.closure_refresh),
 }
 
 class QueryEngine:
@@ -107,15 +123,21 @@ class QueryEngine:
         backend: str = "auto",
         pad_q: int = DEFAULT_PAD_Q,
         chunk_q: int = DEFAULT_CHUNK_Q,
+        closure_staleness_budget: int = CLOSURE_STALENESS_BUDGET,
+        closure_refresh_frac: float = CLOSURE_REFRESH_FRAC,
     ):
         self.backend = resolve_query_backend(backend)
         self.pad_q = pad_q
         self.chunk_q = max(chunk_q, pad_q)
+        self.closure_staleness_budget = closure_staleness_budget
+        self.closure_refresh_frac = closure_refresh_frac
         self._jits: Dict[str, Callable] = {}
         self._closure: Optional[jax.Array] = None
         self._closure_epoch: Optional[int] = None
-        self._closure_family: Optional[jax.Array] = None
-        self.closure_refreshes = 0
+        self._closure_family: Optional[bytes] = None
+        self.closure_refreshes = 0           # full O(w³ log w) builds
+        self.closure_incremental_refreshes = 0  # touched-row O(T·w²) refreshes
+        self._incremental_since_full = 0
         # Engine dispatches per family (one per padded/chunked batch call) —
         # the API planner's one-dispatch-per-family contract is asserted
         # against these counts.
@@ -197,6 +219,17 @@ class QueryEngine:
             (keys, jnp.asarray(thetas, jnp.float32)),
         )
 
+    def heavy_rel_vec(self, sketch: GLavaSketch, keys, thetas):
+        """Per-query RELATIVE-θ heavy-hitter check: flows compare against
+        θ·F̃ with F̃ the total-stream-weight register estimate — the API
+        plane's heavy semantics (θ a fraction in (0, 1], validated at Query
+        construction)."""
+        return self._run_padded(
+            "heavy_rel_vec",
+            (sketch,),
+            (keys, jnp.asarray(thetas, jnp.float32)),
+        )
+
     def subgraph(self, sketch: GLavaSketch, src, dst, optimized: bool = False):
         # Subgraph queries reduce over the WHOLE edge set — zero-padding
         # would change the answer (absent-edge semantics) — so they jit at
@@ -214,6 +247,21 @@ class QueryEngine:
 
     # -- reachability + closure cache ----------------------------------------
 
+    @staticmethod
+    def _family_key(sketch: GLavaSketch) -> bytes:
+        """Hash-family identity BY VALUE: jit-updated sketches carry fresh
+        array objects every batch, so object identity would spuriously miss;
+        the (d, 1) coefficient array is cheap to snapshot."""
+        return np.asarray(sketch.row_hash.a).tobytes()
+
+    def _closure_fresh(self, sketch: GLavaSketch, epoch: Optional[int]) -> bool:
+        return (
+            self._closure is not None
+            and epoch is not None
+            and epoch == self._closure_epoch
+            and self._closure_family == self._family_key(sketch)
+        )
+
     def closure_for(
         self, sketch: GLavaSketch, epoch: Optional[int] = None
     ) -> jax.Array:
@@ -221,21 +269,74 @@ class QueryEngine:
         ``epoch`` differs from the cached tag (``None`` always rebuilds).
 
         The cache is additionally tagged with the sketch's hash-family
-        identity, so one engine serving two different sketch streams can
-        never cross-serve a closure even if their caller-managed epochs
-        collide.  (The hash arrays are stable across ingest and window
-        materialization — unlike the counters, which are fresh per batch —
-        so within one stream the epoch alone decides staleness.)"""
-        if (
-            self._closure is None
-            or epoch is None
-            or epoch != self._closure_epoch
-            or self._closure_family is not sketch.row_hash.a
-        ):
+        VALUE, so one engine serving sketches from differently-seeded
+        streams cannot cross-serve a closure even if their caller-managed
+        epochs collide.  Two SAME-seeded streams share a family value, so
+        the epoch is the only discriminator between them — the engine's
+        contract is one stream per engine (the `GraphStream` facade owns
+        an engine per session); core callers multiplexing one engine
+        across same-family sketches must keep their epochs disjoint."""
+        if not self._closure_fresh(sketch, epoch):
             self._closure = self._fn("closure")(sketch.counters)
             self._closure_epoch = epoch
-            self._closure_family = sketch.row_hash.a
+            self._closure_family = self._family_key(sketch)
             self.closure_refreshes += 1
+            self._incremental_since_full = 0
+        return self._closure
+
+    def refresh_closure(
+        self,
+        sketch: GLavaSketch,
+        touched_keys,
+        epoch: Optional[int] = None,
+    ) -> jax.Array:
+        """Bring the cached closure up to ``epoch`` INCREMENTALLY from the
+        node keys whose rows the mutations since the cached epoch touched
+        (``reach.closure_refresh`` — exact for additions-only histories).
+
+        ``touched_keys`` is a unique (U,) uint32 key array, or ``None``
+        meaning "unknown / not additions-only" (deletes, window expiry,
+        merges) which — like a missing or foreign cached closure — falls
+        back to a full :meth:`closure_for` build.  So does a refresh past
+        the staleness budget (``closure_staleness_budget`` incremental
+        refreshes since the last full build) or a batch touching more than
+        ``closure_refresh_frac`` of the rows, where re-squaring is cheaper.
+        The subscription plane drives this per re-evaluation tick; counts
+        land in ``closure_incremental_refreshes``."""
+        if self._closure_fresh(sketch, epoch):
+            return self._closure
+        can_incremental = (
+            self._closure is not None
+            and touched_keys is not None
+            and epoch is not None
+            and self._closure_family == self._family_key(sketch)
+            and self._incremental_since_full < self.closure_staleness_budget
+        )
+        if can_incremental:
+            touched_keys = np.atleast_1d(np.asarray(touched_keys))
+            w_r = sketch.counters.shape[1]
+            if touched_keys.size > self.closure_refresh_frac * w_r:
+                can_incremental = False
+        if not can_incremental:
+            return self.closure_for(sketch, epoch)
+        if touched_keys.size == 0:
+            # Nothing touched: the counters are unchanged, only retag.
+            self._closure_epoch = epoch
+            return self._closure
+        rows = sketch.row_hash(
+            jnp.asarray(touched_keys.astype(np.uint32, copy=False))
+        )  # (d, U)
+        pad = (-rows.shape[1]) % CLOSURE_REFRESH_PAD_T
+        if pad:
+            # Padding with row 0 is exact: an untouched row only restates
+            # paths the cached closure already contains.
+            rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        self._closure = self._fn("closure_refresh")(
+            self._closure, sketch.counters, rows
+        )
+        self._closure_epoch = epoch
+        self.closure_incremental_refreshes += 1
+        self._incremental_since_full += 1
         return self._closure
 
     def reach(
@@ -256,3 +357,4 @@ class QueryEngine:
         self._closure = None
         self._closure_epoch = None
         self._closure_family = None
+        self._incremental_since_full = 0

@@ -36,6 +36,53 @@ def transitive_closure(adj: jax.Array, include_self: bool = True) -> jax.Array:
     return jax.lax.fori_loop(0, n_steps, body, a)
 
 
+def closure_refresh(
+    closure: jax.Array, counters: jax.Array, rows: jax.Array
+) -> jax.Array:
+    """Incrementally refresh a cached transitive closure from touched rows.
+
+    ``closure`` is the (d, w, w) bool closure of a PREVIOUS counters state;
+    ``counters`` is the current state, reachable from the previous one by
+    ADDITIONS ONLY (positive-weight ingest — deletions/window expiry must
+    rebuild from scratch); ``rows`` is a (d, T) int32 array of row buckets
+    covering every row that changed in between (a superset is fine:
+    unchanged rows contribute no new paths, and duplicate/padding indices
+    are idempotent under the boolean union).
+
+    Every path in the new graph decomposes into old-edge runs (already in
+    ``closure``) interleaved with departures from touched rows, so with
+    B = closure, Δ = the touched rows of the new adjacency, and
+    S = (Δ·B) restricted to touched columns ((T, T) — touched-row to
+    touched-row hops), the exact new closure is
+
+        B  ∨  B[:, R] · S* · (Δ·B)
+
+    with S* the reflexive-transitive closure of the small S.  Cost is
+    O(T·w²) + O(T³ log T) per sketch instead of the O(w³ log w) full
+    re-squaring — the win the subscription plane's per-batch refresh rides
+    on (DESIGN.md Section 8).  Element-identical to a from-scratch
+    :func:`transitive_closure` of ``counters`` (property-tested)."""
+    b = closure.astype(jnp.float32)                               # (d, w, w)
+    d_idx = jnp.arange(closure.shape[0])[:, None]
+    delta = (counters[d_idx, rows, :] > 0).astype(jnp.float32)    # (d, T, w)
+    # One touched-row departure followed by any old path (B includes self).
+    u = jnp.einsum("dtw,dwv->dtv", delta, b) > 0                  # (d, T, w)
+    # Touched-row to touched-row hop graph and its small closure.
+    s = jnp.take_along_axis(u, rows[:, None, :], axis=2)          # (d, T, T)
+    s_star = transitive_closure(s, include_self=True)             # (d, T, T)
+    # Any number of touched-row departures, ending anywhere.
+    w_reach = (
+        jnp.einsum(
+            "dts,dsv->dtv", s_star.astype(jnp.float32), u.astype(jnp.float32)
+        )
+        > 0
+    )                                                             # (d, T, w)
+    # Old path into a touched row, then the touched-row path machinery.
+    g = jnp.take_along_axis(b, rows[:, None, :], axis=2)          # (d, w, T)
+    add = jnp.einsum("dwt,dtv->dwv", g, w_reach.astype(jnp.float32)) > 0
+    return closure | add
+
+
 def reach_query(sketch, src_keys: jax.Array, dst_keys: jax.Array) -> jax.Array:
     """Batched r̃(a, b): AND over the d sketches of per-sketch reachability
     (paper Section 4.3 map/reduce).  Requires a square sketch (row and column

@@ -19,12 +19,19 @@ and lets the session's planner fuse them through the jit-cached
 QueryEngine; reachability is served from the engine's epoch-tagged
 transitive closure, which refreshes lazily after ingest (DESIGN.md
 Sections 2-4, 7).
+
+Standing queries: a serving workload is usually the SAME mixed batch
+re-asked after every ingest batch — the server exposes the session's
+subscription plane (:meth:`subscribe` / :meth:`events`), so request
+routers register the workload once (compiled once by the planner) and
+stream timestamped result events, with reach served by incremental
+closure refreshes instead of per-request rebuilds (DESIGN.md Section 8).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterator, Optional
 
-from repro.api import GraphStream, Query, SketchConfig
+from repro.api import GraphStream, Query, SketchConfig, Subscription, SubscriptionEvent
 
 
 class SketchServer:
@@ -99,6 +106,24 @@ class SketchServer:
         """Heterogeneous mixed-family batches, planned and fused — the
         service endpoint for callers that speak the typed IR directly."""
         return self.stream.query(*queries)
+
+    # -- standing subscriptions -----------------------------------------------
+
+    def subscribe(self, *queries, **kwargs) -> Subscription:
+        """Register a standing query batch (compiled once, re-evaluated
+        after every ``every``-th ingest/window mutation) — the endpoint a
+        request router binds long-lived client subscriptions to.  See
+        :meth:`repro.api.GraphStream.subscribe`."""
+        return self.stream.subscribe(*queries, **kwargs)
+
+    def monitor(self, src, dst, weights, watch, theta: float) -> bool:
+        """Threshold monitor (thin wrapper over a heavy-hitter
+        subscription; θ is a fraction of total stream weight)."""
+        return self.stream.monitor(src, dst, weights, watch, theta)
+
+    def events(self) -> Iterator[SubscriptionEvent]:
+        """Drain the session-wide subscription event feed."""
+        return self.stream.events()
 
     # intentionally re-exported so request routers can build IR objects
     Query = Query

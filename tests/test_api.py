@@ -136,8 +136,8 @@ def _mixed_queries(rng, src, dst):
         Query.in_flow(int(dst[1])),
         Query.out_flow(pick(7)),
         Query.flow(pick(2)),
-        Query.heavy(pick(4), theta=10.0),
-        Query.heavy(int(src[2]), theta=3.0),
+        Query.heavy(pick(4), theta=0.005),
+        Query.heavy(int(src[2]), theta=0.25),
         Query.reach(pick(3), np.asarray(rng.choice(dst, 3), np.uint32)),
         Query.subgraph(src[:2], dst[:2]),
         Query.subgraph(src[2:7], dst[2:7]),
@@ -158,7 +158,10 @@ def _oracle_value(q, sk, epoch):
     elif q.family == "flow":
         out = np.asarray(eng.flow(sk, u))
     elif q.family == "heavy":
-        i, o = eng.heavy(sk, u, q.theta)
+        # API θ is RELATIVE (fraction of total stream weight F̃)
+        i, o = eng.heavy_rel_vec(
+            sk, u, jnp.full(u.shape, q.theta, jnp.float32)
+        )
         i, o = np.asarray(i), np.asarray(o)
         return (i[0], o[0]) if q.scalar else (i, o)
     elif q.family == "reach":
@@ -200,7 +203,7 @@ def test_shuffled_mixed_batch_contract(loaded_stream, seed):
     # exactly one dispatch per family present (reach = reach_pre; the
     # closure build is a separate amortized cache, not a query dispatch)
     dispatch_key = {
-        "heavy": "heavy_vec",
+        "heavy": "heavy_rel_vec",
         "reach": "reach_pre",
         "subgraph": "subgraph_batch",
     }
@@ -347,14 +350,32 @@ def test_checkpoint_restore_roundtrip(tmp_path):
     )
 
 
-def test_monitor_alarm_matches_core():
+def test_monitor_is_threshold_subscription():
+    """monitor() is a thin wrapper over a standing heavy-hitter
+    subscription: θ is a fraction of total stream weight, the subscription
+    is registered once per (watch, θ) and re-used, and the alarm is the
+    subscription's predicate on the post-ingest estimate."""
     gs = GraphStream.open(SketchConfig(depth=3, width_rows=128, width_cols=128))
-    src = np.zeros(50, np.uint32)
-    dst = np.full(50, 7, np.uint32)
-    w = np.full(50, 10.0, np.float32)
-    assert not gs.monitor(src, dst, w, watch=7, theta=1000.0)
-    assert gs.monitor(src, dst, w, watch=7, theta=600.0)  # 500 already in
-    assert gs.stats.edges_ingested == 100
+    bg_src = np.arange(50, dtype=np.uint32)
+    bg_dst = np.arange(100, 150, dtype=np.uint32)
+    w1 = np.ones(50, np.float32)
+    # background only: target 7 draws (at most a collision's worth of)
+    # traffic — far below 90% of F
+    assert not gs.monitor(bg_src, bg_dst, w1, watch=7, theta=0.9)
+    assert len(gs.subscriptions) == 1  # the standing monitor subscription
+    # flood: 460 of the 510 total now flows into 7 -> share > 0.9 (the
+    # in-flow estimate only over-estimates; F̃ is exact here)
+    flood_src = np.zeros(46, np.uint32)
+    flood_dst = np.full(46, 7, np.uint32)
+    assert gs.monitor(
+        flood_src, flood_dst, np.full(46, 10.0, np.float32), watch=7, theta=0.9
+    )
+    assert len(gs.subscriptions) == 1  # reused, not re-registered
+    assert gs.stats.edges_ingested == 96
+    assert gs.stats.subscription_ticks == 2
+    # absolute thresholds are a clear error now, not silently-false bits
+    with pytest.raises(ValueError):
+        gs.monitor(bg_src, bg_dst, w1, watch=7, theta=600.0)
 
 
 @pytest.mark.slow

@@ -54,11 +54,33 @@ def test_windowed_server_expiry():
 def test_heavy_hitter_monitor(server):
     rng = np.random.default_rng(1)
     src = rng.integers(0, 100, 2000).astype(np.uint32)
-    dst = np.full(2000, 7, np.uint32)  # flood node 7
+    dst = np.full(2000, 7, np.uint32)  # flood node 7: 100% of in-flow
     server.ingest(src, dst)
-    flags = server.heavy_hitters(np.arange(10, dtype=np.uint32), theta=100.0)
+    flags = server.heavy_hitters(np.arange(10, dtype=np.uint32), theta=0.5)
     assert flags[7]
     assert not flags[3]
+
+
+def test_server_standing_subscription(server):
+    """The serving engine exposes the session's subscription plane."""
+    rng = np.random.default_rng(2)
+    sub = server.subscribe(
+        server.Query.in_flow(np.arange(8, dtype=np.uint32)),
+        every=2,
+        name="svc",
+    )
+    for _ in range(4):
+        server.ingest(
+            rng.integers(0, 100, 50).astype(np.uint32),
+            rng.integers(0, 100, 50).astype(np.uint32),
+        )
+    events = sub.poll()
+    assert sub.ticks == 2 and len(events) == 2
+    assert events[-1].epoch == server.stream.epoch
+    # the session-wide feed carries the same events (independent drain)
+    assert len(list(server.events())) == 2
+    assert len(list(server.events())) == 0  # drained
+    sub.cancel()
 
 
 def test_subgraph_weight(server):
