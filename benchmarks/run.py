@@ -2,8 +2,10 @@
 has no experimental tables; Thm 1, Lemma 5.2, Sections 3.2/4.3/4.4/6.1.2 are
 the claims).  Prints ``name,us_per_call,derived`` CSV rows, writes
 results/benchmarks.json (all sections), and writes the query-plane rows to
-BENCH_queries.json at the REPO ROOT — the perf-trajectory file tracking
-queries/sec per family and the subscription ticks/sec figure across PRs.
+BENCH_queries.json and the ingest-plane rows (per-backend edges/sec) to
+BENCH_ingest.json at the REPO ROOT — the perf-trajectory files tracking
+queries/sec per family, the subscription ticks/sec figure, and ingest
+edges/sec per backend across PRs.
 """
 from __future__ import annotations
 
@@ -47,9 +49,14 @@ def main() -> None:
     # leave a comparable perf record (ticks/sec, qps per family).
     bench_q = REPO_ROOT / "BENCH_queries.json"
     bench_q.write_text(json.dumps(section_rows.get("queries", []), indent=1))
+    # Same for the ingest plane: the per-backend edges/sec sweep rows
+    # (ingest_backend_{scatter,onehot,pallas}) seed the trajectory the
+    # ROADMAP's tens-of-millions-of-edges/sec push is measured against.
+    bench_i = REPO_ROOT / "BENCH_ingest.json"
+    bench_i.write_text(json.dumps(section_rows.get("ingest", []), indent=1))
     print(
         f"# done: {len(ROWS)} rows in {time.time()-t0:.1f}s -> "
-        f"results/benchmarks.json + {bench_q}"
+        f"results/benchmarks.json + {bench_q} + {bench_i}"
     )
 
 

@@ -1,0 +1,39 @@
+"""repro.analysis — the static-analysis plane enforcing hot-path contracts.
+
+Two passes, one CLI (``python -m repro.analysis``):
+
+- **Pass 1, jaxpr contract checker** (:mod:`repro.analysis.jaxpr_lint` +
+  :mod:`repro.analysis.contracts`): traces a registry of engine entry
+  points (every ``IngestEngine`` backend, every ``QueryEngine`` family,
+  ``refresh_closure``, the subscription tick, each ``kernels/*/ops.py``
+  wrapper, the distributed plane) and checks declarative contracts on the
+  traced jaxprs — no host callbacks, no wide-dtype promotion, no
+  full-counter reduction for register-served families, buffer donation
+  applied through the jit boundary, collectives only under ``shard_map``,
+  and at most one trace per family per shape signature.
+- **Pass 2, source lint** (:mod:`repro.analysis.source_lint`): AST rules
+  specific to this codebase — ``jax.jit`` only in the engine cache
+  modules, no host syncs in traced modules, no ``jnp.*`` inside Python
+  loops in hot modules, ``REPRO_*`` env reads only at dispatch
+  boundaries, and every Pallas kernel keeps a registered ref +
+  bit-equality test.
+
+Pre-existing violations are either fixed or explicitly baselined with a
+one-line justification in :mod:`repro.analysis.baseline`; the CLI exits
+nonzero on any NEW (unbaselined) violation.  DESIGN.md Section 9 has the
+architecture and the full contract table.
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    ENTRY_POINTS,
+    EntryPoint,
+    TracedEntry,
+    Violation,
+    apply_baseline,
+)
+from repro.analysis.jaxpr_lint import (  # noqa: F401
+    reduces_full_counters,
+    run_jaxpr_pass,
+    walk_jaxprs,
+)
+from repro.analysis.runner import main, run_analysis  # noqa: F401
+from repro.analysis.source_lint import lint_file, lint_tree  # noqa: F401

@@ -1,0 +1,527 @@
+"""Entry-point registry + declarative hot-path contracts.
+
+The repo's performance story rests on invariants that used to live in one
+test or nowhere: register-served queries never reduce the full counter
+tensor, hot paths never sync to the host, the ingest jit boundary donates
+the sketch buffers, collectives only ever run under ``shard_map``, and one
+jit trace serves a whole family per shape signature.  This module makes
+those invariants DATA: every engine entry point registers here with the
+contracts it must satisfy, and :mod:`repro.analysis.jaxpr_lint` checks
+them against the traced jaxprs.
+
+Contract vocabulary (see DESIGN.md Section 9 for the full table):
+
+``no-host-callback``            no host-transfer/callback primitive in the
+                                traced jaxpr (``pure_callback`` & co.).
+``no-wide-dtype``               no float64/int64/complex128 aval anywhere —
+                                a weak-type or x64 promotion doubles HBM
+                                traffic silently.
+``no-counter-reduction``        no reduction primitive consumes an operand
+                                of the full (d, w_r, w_c) counter shape —
+                                the register-served O(d·Q) guarantee.
+``collectives-under-shard-map`` psum/pmin/all_gather/... appear only inside
+                                a ``shard_map`` sub-jaxpr.
+``donation-applied``            the jit boundary actually aliases the
+                                donated sketch buffers into its outputs
+                                (``tf.aliasing_output`` in the lowering) —
+                                a dropped donation silently re-adds the
+                                full-sketch copy per batch.
+
+Dynamic contracts (the retrace detector) live in :data:`DYNAMIC_CHECKS`:
+they drive the real engines twice with value-identical but object-fresh
+inputs and assert the jit/closure caches do not grow — catching cache-key
+bugs like the by-``is`` closure-cache miss fixed in PR 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# violations + baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract breach: ``rule`` names the contract/lint rule,
+    ``subject`` the entry point or ``file::function``, ``message`` the
+    specifics.  ``baselined`` marks a pre-existing, justified breach."""
+
+    rule: str
+    subject: str
+    message: str
+    pass_name: str
+    baselined: bool = False
+    justification: str = ""
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = "~" if self.baselined else "!"
+        line = f"{tag} [{self.pass_name}] {self.rule} {self.subject}: {self.message}"
+        if self.baselined:
+            line += f"  (baselined: {self.justification})"
+        return line
+
+
+def apply_baseline(
+    violations: List[Violation], baseline: Optional[Dict[Tuple[str, str], str]]
+) -> List[Violation]:
+    """Mark violations whose (rule, subject) carries a baseline entry."""
+    if not baseline:
+        return list(violations)
+    out = []
+    for v in violations:
+        just = baseline.get((v.rule, v.subject))
+        if just is not None and not v.baselined:
+            v = dataclasses.replace(v, baselined=True, justification=just)
+        out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TracedEntry:
+    """What one entry point hands the jaxpr checker: a traceable ``fn`` +
+    ``args``, the counter-tensor shape for the reduction rule, and (for the
+    donation contract) the jit-wrapped callable to lower."""
+
+    fn: Callable
+    args: Tuple
+    counters_shape: Optional[Tuple[int, ...]] = None
+    jit_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    contracts: Tuple[str, ...]
+    build: Callable[[], TracedEntry]
+
+
+HOT = ("no-host-callback", "no-wide-dtype", "collectives-under-shard-map")
+REGISTER_SERVED = HOT + ("no-counter-reduction",)
+
+_FIXTURE_WIDTH = 64
+_FIXTURE_DEPTH = 2
+
+
+def _fixture_sketch():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.sketch import GLavaSketch, SketchConfig
+
+    cfg = SketchConfig(
+        depth=_FIXTURE_DEPTH, width_rows=_FIXTURE_WIDTH, width_cols=_FIXTURE_WIDTH
+    )
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    src = jnp.arange(8, dtype=jnp.uint32)
+    dst = jnp.arange(8, 16, dtype=jnp.uint32)
+    w = jnp.ones(8, jnp.float32)
+    return sk, src, dst, w
+
+
+def copy_sketch(sk):
+    """Value-identical sketch with FRESH array objects (and fresh hash-family
+    arrays) — the retrace detector's probe for identity-keyed caches."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(np.asarray(x)), sk)
+
+
+def _ingest_entry(backend: str) -> Callable[[], TracedEntry]:
+    def build():
+        from repro.core.ingest import ingest
+
+        sk, src, dst, w = _fixture_sketch()
+        rows, cols = sk.hash_edges(src, dst)
+        return TracedEntry(
+            fn=lambda c, r, cc, ww: ingest(c, r, cc, ww, backend=backend),
+            args=(sk.counters, rows, cols, w),
+        )
+
+    return build
+
+
+def _ingest_jit_boundary() -> TracedEntry:
+    """The GraphStream ingest jit boundary — the REAL session callable, so
+    the donation contract breaks if ``GraphStream.__init__`` stops donating
+    the sketch pytree."""
+    from repro.api.stream import GraphStream
+    from repro.core.sketch import SketchConfig
+
+    gs = GraphStream.open(
+        SketchConfig(
+            depth=_FIXTURE_DEPTH,
+            width_rows=_FIXTURE_WIDTH,
+            width_cols=_FIXTURE_WIDTH,
+        ),
+        ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    import jax
+
+    _, src, dst, w = _fixture_sketch()
+    leaves = jax.tree_util.tree_leaves(gs._sketch)
+    uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
+    return TracedEntry(
+        fn=gs._jit_update,
+        args=(uniq, src, dst, w),
+        jit_fn=gs._jit_update,
+    )
+
+
+def _query_entry(family: str) -> Callable[[], TracedEntry]:
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import queries, reach
+
+        sk, src, dst, w = _fixture_sketch()
+        shape = tuple(sk.counters.shape)
+        theta = jnp.asarray(10.0, jnp.float32)
+        thetas = jnp.full(src.shape, 0.5, jnp.float32)
+        if family == "edge":
+            return TracedEntry(queries.edge_query, (sk, src, dst), shape)
+        if family == "edge.pallas":
+            from repro.core.query_engine import _pallas_edge_query
+
+            return TracedEntry(_pallas_edge_query, (sk, src, dst), shape)
+        if family in ("in_flow", "out_flow", "flow"):
+            fn = getattr(queries, f"node_{family}" if family != "flow" else "node_flow")
+            return TracedEntry(fn, (sk, src), shape)
+        if family == "heavy":
+            return TracedEntry(queries.check_heavy_keys, (sk, src, theta), shape)
+        if family == "heavy_vec":
+            return TracedEntry(queries.check_heavy_keys_vec, (sk, src, thetas), shape)
+        if family == "heavy_rel_vec":
+            return TracedEntry(
+                queries.check_heavy_keys_rel_vec, (sk, src, thetas), shape
+            )
+        if family == "monitor_step":
+            return TracedEntry(
+                lambda s, a, b, ww, watch: queries.monitor_step(
+                    s, a, b, ww, watch, theta=100.0
+                ),
+                (sk, src, dst, w, src[0]),
+                shape,
+            )
+        if family == "subgraph":
+            return TracedEntry(queries.subgraph_query, (sk, src[:3], dst[:3]), shape)
+        if family == "subgraph_batch":
+            s2 = jnp.stack([src[:4], src[4:]])
+            d2 = jnp.stack([dst[:4], dst[4:]])
+            mask = jnp.ones(s2.shape, bool)
+            return TracedEntry(
+                queries.subgraph_query_batch, (sk, s2, d2, mask), shape
+            )
+        if family == "reach_pre":
+            closure = reach.transitive_closure(sk.counters)
+            return TracedEntry(
+                reach.reach_query_precomputed, (sk, closure, src, src), shape
+            )
+        if family == "closure":
+            return TracedEntry(reach.transitive_closure, (sk.counters,), shape)
+        if family == "closure_refresh":
+            closure = reach.transitive_closure(sk.counters)
+            rows = sk.row_hash(src)
+            return TracedEntry(
+                reach.closure_refresh, (closure, sk.counters, rows), shape
+            )
+        raise ValueError(f"no fixture for query family {family!r}")
+
+    return build
+
+
+def _kernel_entry(name: str) -> Callable[[], TracedEntry]:
+    def build():
+        import jax.numpy as jnp
+
+        sk, src, dst, w = _fixture_sketch()
+        if name == "ingest":
+            from repro.kernels.ingest import ops
+
+            rows, cols = sk.hash_edges(src, dst)
+            return TracedEntry(ops.sketch_ingest, (sk.counters, rows, cols, w))
+        if name == "query":
+            from repro.kernels.query import ops
+
+            rows, cols = sk.hash_edges(src, dst)
+            return TracedEntry(
+                lambda c, r, cc: ops.edge_query_min(c, r, cc, interpret=True),
+                (sk.counters, rows, cols),
+            )
+        if name == "closure":
+            from repro.kernels.closure import ops
+
+            return TracedEntry(
+                lambda c: ops.transitive_closure(c, interpret=True), (sk.counters,)
+            )
+        if name == "flow":
+            from repro.kernels.flow import ops
+
+            return TracedEntry(
+                lambda c: ops.flows(c, interpret=True), (sk.counters,)
+            )
+        if name == "countsketch":
+            from repro.kernels.countsketch import ops
+
+            fam = sk.row_hash
+            vec = jnp.arange(512, dtype=jnp.float32)
+            return TracedEntry(
+                lambda v: ops.countsketch(v, fam, interpret=True), (vec,)
+            )
+        raise ValueError(f"no fixture for kernel {name!r}")
+
+    return build
+
+
+def _single_device_mesh():
+    import jax
+
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+
+
+def _distributed_ingest_entry() -> TracedEntry:
+    from repro.core.distributed import distributed_ingest
+
+    sk, src, dst, w = _fixture_sketch()
+    mesh = _single_device_mesh()
+    return TracedEntry(
+        lambda s, d, ww: distributed_ingest(mesh, sk, s, d, ww).counters,
+        (src, dst, w),
+    )
+
+
+def _distributed_point_entry() -> TracedEntry:
+    from repro.core.distributed import distributed_point_query
+
+    sk, src, dst, w = _fixture_sketch()
+    mesh = _single_device_mesh()
+    return TracedEntry(
+        lambda keys: distributed_point_query(
+            mesh, sk, keys, use_registers=False
+        ),
+        (src,),
+    )
+
+
+ENTRY_POINTS: Tuple[EntryPoint, ...] = (
+    # -- every IngestEngine backend dispatch ------------------------------
+    EntryPoint("ingest.scatter", HOT, _ingest_entry("scatter")),
+    EntryPoint("ingest.onehot", HOT, _ingest_entry("onehot")),
+    EntryPoint("ingest.pallas", HOT, _ingest_entry("pallas")),
+    # -- the session ingest jit boundary (donated sketch buffers) ---------
+    EntryPoint(
+        "ingest.jit_boundary", HOT + ("donation-applied",), _ingest_jit_boundary
+    ),
+    # -- every QueryEngine family -----------------------------------------
+    EntryPoint("query.edge", HOT, _query_entry("edge")),
+    EntryPoint("query.edge.pallas", HOT, _query_entry("edge.pallas")),
+    EntryPoint("query.in_flow", REGISTER_SERVED, _query_entry("in_flow")),
+    EntryPoint("query.out_flow", REGISTER_SERVED, _query_entry("out_flow")),
+    EntryPoint("query.flow", REGISTER_SERVED, _query_entry("flow")),
+    EntryPoint("query.heavy", REGISTER_SERVED, _query_entry("heavy")),
+    EntryPoint("query.heavy_vec", REGISTER_SERVED, _query_entry("heavy_vec")),
+    EntryPoint(
+        "query.heavy_rel_vec", REGISTER_SERVED, _query_entry("heavy_rel_vec")
+    ),
+    EntryPoint(
+        "query.monitor_step", REGISTER_SERVED, _query_entry("monitor_step")
+    ),
+    EntryPoint("query.subgraph", HOT, _query_entry("subgraph")),
+    EntryPoint("query.subgraph_batch", HOT, _query_entry("subgraph_batch")),
+    EntryPoint("query.reach_pre", REGISTER_SERVED, _query_entry("reach_pre")),
+    EntryPoint("query.closure", HOT, _query_entry("closure")),
+    EntryPoint("query.closure_refresh", HOT, _query_entry("closure_refresh")),
+    # -- every kernels/*/ops.py wrapper (interpret-mode trace) -------------
+    EntryPoint("kernels.ingest.ops", HOT, _kernel_entry("ingest")),
+    EntryPoint("kernels.query.ops", HOT, _kernel_entry("query")),
+    EntryPoint("kernels.closure.ops", HOT, _kernel_entry("closure")),
+    EntryPoint("kernels.flow.ops", HOT, _kernel_entry("flow")),
+    EntryPoint("kernels.countsketch.ops", HOT, _kernel_entry("countsketch")),
+    # -- the distributed plane (collectives MUST sit under shard_map) ------
+    EntryPoint("distributed.ingest", HOT, _distributed_ingest_entry),
+    EntryPoint("distributed.point_query", HOT, _distributed_point_entry),
+)
+
+
+# ---------------------------------------------------------------------------
+# dynamic contracts — the retrace detector
+# ---------------------------------------------------------------------------
+
+
+def _cache_size(jitted) -> Optional[int]:
+    return jitted._cache_size() if hasattr(jitted, "_cache_size") else None
+
+
+def check_retrace_query_families(engine_cls=None) -> List[Violation]:
+    """At most ONE trace per family per shape signature: dispatch each
+    family twice — the second time with value-identical but object-fresh
+    sketch/key arrays — and assert the per-family jit cache did not grow.
+    A second trace means the cache key depends on object identity or on a
+    value that changes per batch (the class of bug PR 5 fixed)."""
+    import jax.numpy as jnp
+
+    from repro.core.query_engine import QueryEngine
+
+    engine_cls = engine_cls or QueryEngine
+    eng = engine_cls("jnp", pad_q=8)
+    sk, src, dst, w = _fixture_sketch()
+    thetas = jnp.full(src.shape, 0.5, jnp.float32)
+    calls = {
+        "edge": lambda e, s, fresh: e.edge(s, *fresh((src, dst))),
+        "in_flow": lambda e, s, fresh: e.in_flow(s, *fresh((src,))),
+        "out_flow": lambda e, s, fresh: e.out_flow(s, *fresh((src,))),
+        "flow": lambda e, s, fresh: e.flow(s, *fresh((src,))),
+        "heavy_rel_vec": lambda e, s, fresh: e.heavy_rel_vec(
+            s, *fresh((src, thetas))
+        ),
+    }
+    out: List[Violation] = []
+    for family, call in calls.items():
+        call(eng, sk, lambda xs: xs)
+        sizes = {f: _cache_size(fn) for f, fn in eng._jits.items()}
+        fresh = lambda xs: tuple(jnp.asarray(np.asarray(x)) for x in xs)
+        call(eng, copy_sketch(sk), fresh)
+        for f, fn in eng._jits.items():
+            before, after = sizes.get(f), _cache_size(fn)
+            if before is not None and after is not None and after > before:
+                out.append(
+                    Violation(
+                        rule="retrace",
+                        subject=f"query.{family}",
+                        message=(
+                            f"family {f!r} re-traced on a value-identical "
+                            f"same-shape dispatch ({before} -> {after} cache "
+                            "entries): jit cache key leaks per-batch state"
+                        ),
+                        pass_name="jaxpr",
+                    )
+                )
+    return out
+
+
+def check_closure_cache_value_keyed() -> List[Violation]:
+    """The epoch-tagged closure cache must key the hash family BY VALUE:
+    jit-updated sketches carry fresh array objects every batch, so an
+    identity-keyed cache rebuilds the O(w³ log w) closure per batch (the
+    exact PR 5 bug)."""
+    import jax.numpy as jnp
+
+    from repro.core.query_engine import QueryEngine
+
+    eng = QueryEngine("jnp", pad_q=8)
+    sk, src, _, _ = _fixture_sketch()
+    q = src[:2]
+    eng.reach(sk, q, q, epoch=0)
+    builds = eng.closure_refreshes
+    eng.reach(copy_sketch(sk), jnp.asarray(np.asarray(q)), q, epoch=0)
+    if eng.closure_refreshes != builds:
+        return [
+            Violation(
+                rule="retrace",
+                subject="query.reach.closure_cache",
+                message=(
+                    "closure cache MISSED on a value-identical sketch at the "
+                    "same epoch — the cache key depends on array object "
+                    "identity instead of hash-family value"
+                ),
+                pass_name="jaxpr",
+            )
+        ]
+    return []
+
+
+def check_subscription_tick() -> List[Violation]:
+    """The subscription tick contract: over N additions-only mutations, a
+    standing reach+flow+edge batch performs exactly ONE full closure build,
+    N-1 incremental touched-row refreshes, and never re-traces a family
+    after its first tick."""
+    from repro.api.query import Query
+    from repro.api.stream import GraphStream
+    from repro.core.sketch import SketchConfig
+
+    gs = GraphStream.open(
+        SketchConfig(
+            depth=_FIXTURE_DEPTH,
+            width_rows=_FIXTURE_WIDTH,
+            width_cols=_FIXTURE_WIDTH,
+        ),
+        ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    gs.subscribe(
+        Query.reach(1, 2), Query.in_flow(2), Query.edge(1, 2), every=1
+    )
+    rng = np.random.default_rng(0)
+    sizes_after_first: Dict[str, Optional[int]] = {}
+    n_ticks = 3
+    for tick in range(n_ticks):
+        src = rng.integers(0, 30, 6).astype(np.uint32)
+        dst = rng.integers(0, 30, 6).astype(np.uint32)
+        gs.ingest(src, dst)
+        if tick == 0:
+            sizes_after_first = {
+                f: _cache_size(fn) for f, fn in gs.engine._jits.items()
+            }
+    out: List[Violation] = []
+    if gs.engine.closure_refreshes != 1:
+        out.append(
+            Violation(
+                rule="retrace",
+                subject="subscription.tick",
+                message=(
+                    f"{gs.engine.closure_refreshes} full closure builds over "
+                    f"{n_ticks} additions-only ticks (want exactly 1 — later "
+                    "ticks must ride the touched-row incremental refresh)"
+                ),
+                pass_name="jaxpr",
+            )
+        )
+    if gs.engine.closure_incremental_refreshes != n_ticks - 1:
+        out.append(
+            Violation(
+                rule="retrace",
+                subject="subscription.tick",
+                message=(
+                    f"{gs.engine.closure_incremental_refreshes} incremental "
+                    f"refreshes over {n_ticks} ticks (want {n_ticks - 1})"
+                ),
+                pass_name="jaxpr",
+            )
+        )
+    for f, fn in gs.engine._jits.items():
+        before, after = sizes_after_first.get(f), _cache_size(fn)
+        if before is not None and after is not None and after > before:
+            out.append(
+                Violation(
+                    rule="retrace",
+                    subject="subscription.tick",
+                    message=(
+                        f"family {f!r} re-traced after its first tick "
+                        f"({before} -> {after} jit cache entries)"
+                    ),
+                    pass_name="jaxpr",
+                )
+            )
+    return out
+
+
+DYNAMIC_CHECKS: Dict[str, Callable[[], List[Violation]]] = {
+    "retrace.query_families": check_retrace_query_families,
+    "retrace.closure_cache": check_closure_cache_value_keyed,
+    "retrace.subscription_tick": check_subscription_tick,
+}

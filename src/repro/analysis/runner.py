@@ -1,0 +1,137 @@
+"""CLI + report assembly for ``python -m repro.analysis``.
+
+Runs the jaxpr contract pass and the AST source pass, folds in the
+baseline, and renders a text or JSON report.  Exit status is 0 iff there
+are zero UNBASELINED violations — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, Iterable, List, Optional
+
+from repro.analysis.contracts import Violation, apply_baseline
+
+_PASSES = ("jaxpr", "source")
+
+
+def _default_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]  # src/repro
+
+
+def _default_tests_dir(root: pathlib.Path) -> Optional[pathlib.Path]:
+    for cand in (root.parents[1] / "tests" if len(root.parents) >= 2 else None,):
+        if cand is not None and cand.is_dir():
+            return cand
+    return None
+
+
+def run_analysis(
+    passes: Iterable[str] = _PASSES,
+    *,
+    root: Optional[pathlib.Path] = None,
+    tests_dir: Optional[pathlib.Path] = None,
+    entry_points=None,
+    baseline: Optional[Dict] = None,
+) -> Dict:
+    """Run the requested passes and return the report dict:
+    ``{ok, counts, checked_entry_points, violations: [...]}``.  ``ok`` is
+    True iff no unbaselined violation survived."""
+    from repro.analysis.baseline import BASELINE
+
+    passes = tuple(passes)
+    root = pathlib.Path(root) if root is not None else _default_root()
+    tests_dir = (
+        pathlib.Path(tests_dir) if tests_dir is not None else _default_tests_dir(root)
+    )
+    baseline = BASELINE if baseline is None else baseline
+
+    violations: List[Violation] = []
+    checked: List[str] = []
+    if "jaxpr" in passes:
+        from repro.analysis.contracts import ENTRY_POINTS
+        from repro.analysis.jaxpr_lint import run_jaxpr_pass
+
+        eps = ENTRY_POINTS if entry_points is None else tuple(entry_points)
+        checked = [ep.name for ep in eps]
+        violations.extend(
+            run_jaxpr_pass(None if entry_points is None else eps)
+        )
+    if "source" in passes:
+        from repro.analysis.source_lint import lint_tree
+
+        violations.extend(lint_tree(root, tests_dir))
+
+    violations = apply_baseline(violations, baseline)
+    new = [v for v in violations if not v.baselined]
+    old = [v for v in violations if v.baselined]
+    return {
+        "ok": not new,
+        "passes": list(passes),
+        "root": str(root),
+        "checked_entry_points": checked,
+        "counts": {
+            "violations": len(new),
+            "baselined": len(old),
+            "entry_points": len(checked),
+        },
+        "violations": [v.to_json() for v in violations],
+    }
+
+
+def _render_text(report: Dict) -> str:
+    lines = []
+    for v in report["violations"]:
+        lines.append(Violation(**v).render())
+    c = report["counts"]
+    lines.append(
+        f"repro.analysis: {c['entry_points']} entry points, "
+        f"{c['violations']} violation(s), {c['baselined']} baselined"
+    )
+    lines.append("OK" if report["ok"] else "FAIL")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Hot-path contract checks: jaxpr pass + source lint.",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="report format on stdout",
+    )
+    parser.add_argument(
+        "--output", type=pathlib.Path, default=None,
+        help="also write the JSON report to this path",
+    )
+    parser.add_argument(
+        "--passes", default=",".join(_PASSES),
+        help="comma-separated subset of passes: jaxpr,source",
+    )
+    parser.add_argument(
+        "--root", type=pathlib.Path, default=None,
+        help="package tree to lint (default: the installed repro package)",
+    )
+    parser.add_argument(
+        "--tests-dir", type=pathlib.Path, default=None,
+        help="tests directory for the kernel-ref coverage rule",
+    )
+    args = parser.parse_args(argv)
+
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = [p for p in passes if p not in _PASSES]
+    if unknown:
+        parser.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    report = run_analysis(passes, root=args.root, tests_dir=args.tests_dir)
+
+    if args.output is not None:
+        args.output.write_text(json.dumps(report, indent=2) + "\n")
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        print(_render_text(report))
+    return 0 if report["ok"] else 1

@@ -1,0 +1,301 @@
+"""Pass 2 — AST source lint for this codebase's hot-path idioms.
+
+Rules (scoped by path relative to the lint root, so the same rules run
+over ``src/repro`` in CI and over small fixture trees in the analyzer's
+own tests):
+
+``direct-jit``   ``jax.jit`` appears only in the two engine cache modules
+                 (``core/query_engine.py``, ``api/stream.py``).  Ad-hoc
+                 jits fragment the per-family cache and defeat the
+                 retrace accounting.  Scope: core/, api/, kernels/,
+                 serve/.
+``host-sync``    no ``.item()`` / ``jax.device_get`` / ``np.asarray`` in
+                 modules whose functions run under trace — each one
+                 forces a device sync (or a tracer error) mid-pipeline.
+                 Scope: kernels/** plus ``core/queries.py``,
+                 ``core/reach.py``, ``core/window.py``.
+``jnp-in-loop``  no ``jnp.*`` call inside a Python ``for``/``while`` in
+                 hot modules — each iteration dispatches a fresh op (and
+                 under trace unrolls the loop); use ``lax.fori_loop`` /
+                 ``scan``.  Scope: core/, kernels/.
+``env-read``     ``REPRO_*`` environment variables are read only at the
+                 two dispatch boundaries (``core/ingest.py``,
+                 ``core/query_engine.py``); reads elsewhere make config
+                 ambient and untestable.
+``kernel-ref``   every ``kernels/<name>/`` with a ``kernel.py`` ships
+                 ``ops.py`` + ``ref.py`` and the kernel test imports both
+                 the ops wrapper and the ref oracle (bit-equality
+                 harness).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional, Union
+
+from repro.analysis.contracts import Violation
+
+# -- per-rule path scopes (POSIX-style, relative to the lint root) ----------
+
+DIRECT_JIT_DIRS = ("core", "api", "kernels", "serve")
+DIRECT_JIT_ALLOW = ("core/query_engine.py", "api/stream.py")
+
+HOST_SYNC_DIRS = ("kernels",)
+HOST_SYNC_FILES = ("core/queries.py", "core/reach.py", "core/window.py")
+
+JNP_LOOP_DIRS = ("core", "kernels")
+
+ENV_READ_ALLOW = ("core/ingest.py", "core/query_engine.py")
+
+HOST_SYNC_CALLS = frozenset({"device_get", "block_until_ready"})
+
+
+def _in_dirs(rel: str, dirs) -> bool:
+    return any(rel == d or rel.startswith(d + "/") for d in dirs)
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """'jax.numpy.pad' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str, path: str):
+        self.rel = rel
+        self.path = path
+        self.loop_depth = 0
+        self.def_stack: List[str] = []
+        self.violations: List[Violation] = []
+        self.jnp_aliases = {"jnp"}  # names bound to jax.numpy
+        self.np_aliases = {"np", "numpy"}
+
+    # -- context tracking ---------------------------------------------------
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            if alias.name == "jax.numpy":
+                self.jnp_aliases.add(alias.asname or "jax")
+            if alias.name == "numpy":
+                self.np_aliases.add(alias.asname or "numpy")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._visit_def(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef):
+        self._visit_def(node)
+
+    def _visit_def(self, node):
+        self.def_stack.append(node.name)
+        outer_depth, self.loop_depth = self.loop_depth, 0
+        self.generic_visit(node)
+        self.loop_depth = outer_depth
+        self.def_stack.pop()
+
+    def visit_For(self, node: ast.For):
+        self._visit_loop(node)
+
+    def visit_While(self, node: ast.While):
+        self._visit_loop(node)
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    # -- rule checks --------------------------------------------------------
+
+    def _subject(self, node) -> str:
+        where = "::".join(self.def_stack) or "<module>"
+        return f"{self.rel}::{where}:{node.lineno}"
+
+    def _flag(self, rule: str, node, message: str):
+        self.violations.append(
+            Violation(rule=rule, subject=self._subject(node), message=message,
+                      pass_name="source")
+        )
+
+    def visit_Attribute(self, node: ast.Attribute):
+        chain = _attr_chain(node)
+        if (
+            chain in ("jax.jit", "jax.numpy.jit")
+            and _in_dirs(self.rel, DIRECT_JIT_DIRS)
+            and self.rel not in DIRECT_JIT_ALLOW
+        ):
+            self._flag(
+                "direct-jit",
+                node,
+                "jax.jit outside the engine cache modules "
+                f"({', '.join(DIRECT_JIT_ALLOW)})",
+            )
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        self._check_host_sync(node)
+        self._check_jnp_in_loop(node)
+        self._check_env_read(node)
+        self.generic_visit(node)
+
+    def _hot_for_sync(self) -> bool:
+        return _in_dirs(self.rel, HOST_SYNC_DIRS) or self.rel in HOST_SYNC_FILES
+
+    def _check_host_sync(self, node: ast.Call):
+        if not self._hot_for_sync():
+            return
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item" and not node.args and not node.keywords:
+                self._flag(
+                    "host-sync", node,
+                    ".item() forces a device->host sync (tracer error under jit)",
+                )
+                return
+            chain = _attr_chain(f)
+            if chain is None:
+                return
+            root, _, rest = chain.partition(".")
+            if rest in HOST_SYNC_CALLS and root == "jax":
+                self._flag("host-sync", node, f"jax.{rest} on a hot path")
+            elif rest == "asarray" and root in self.np_aliases:
+                self._flag(
+                    "host-sync", node,
+                    f"{chain}() materializes a traced value on the host",
+                )
+
+    def _check_jnp_in_loop(self, node: ast.Call):
+        if self.loop_depth == 0 or not _in_dirs(self.rel, JNP_LOOP_DIRS):
+            return
+        chain = _attr_chain(node.func)
+        if chain is None:
+            return
+        root = chain.split(".", 1)[0]
+        if root in self.jnp_aliases or chain.startswith("jax.numpy."):
+            self._flag(
+                "jnp-in-loop", node,
+                f"{chain}() inside a Python loop dispatches per iteration "
+                "(use lax.fori_loop/scan or hoist)",
+            )
+
+    def _check_env_read(self, node: ast.Call):
+        if self.rel in ENV_READ_ALLOW:
+            return
+        chain = _attr_chain(node.func)
+        key_arg = None
+        if chain in ("os.environ.get", "os.getenv") and node.args:
+            key_arg = node.args[0]
+        elif chain is None and isinstance(node.func, ast.Name):
+            return
+        if key_arg is None:
+            return
+        if isinstance(key_arg, ast.Constant) and isinstance(key_arg.value, str):
+            if key_arg.value.startswith("REPRO_"):
+                self._flag(
+                    "env-read", node,
+                    f"{key_arg.value} read outside the dispatch boundaries "
+                    f"({', '.join(ENV_READ_ALLOW)})",
+                )
+
+    def visit_Subscript(self, node: ast.Subscript):
+        # os.environ["REPRO_*"]
+        if self.rel not in ENV_READ_ALLOW:
+            chain = _attr_chain(node.value)
+            sl = node.slice
+            if (
+                chain == "os.environ"
+                and isinstance(sl, ast.Constant)
+                and isinstance(sl.value, str)
+                and sl.value.startswith("REPRO_")
+            ):
+                self._flag(
+                    "env-read", node,
+                    f"{sl.value} read outside the dispatch boundaries "
+                    f"({', '.join(ENV_READ_ALLOW)})",
+                )
+        self.generic_visit(node)
+
+
+def lint_file(path: Union[str, pathlib.Path], rel: Optional[str] = None) -> List[Violation]:
+    """Lint one source file.  ``rel`` is its rule-scope path (POSIX,
+    relative to the lint root); defaults to the file name."""
+    path = pathlib.Path(path)
+    rel = rel if rel is not None else path.name
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as exc:
+        return [
+            Violation(
+                rule="syntax-error", subject=rel,
+                message=f"unparseable: {exc}", pass_name="source",
+            )
+        ]
+    visitor = _Visitor(rel, str(path))
+    visitor.visit(tree)
+    return visitor.violations
+
+
+def _check_kernel_refs(
+    root: pathlib.Path, tests_dir: Optional[pathlib.Path]
+) -> List[Violation]:
+    out: List[Violation] = []
+    kernels = root / "kernels"
+    if not kernels.is_dir():
+        return out
+    test_text = ""
+    test_file = (tests_dir / "test_kernels.py") if tests_dir else None
+    if test_file is not None and test_file.exists():
+        test_text = test_file.read_text()
+    for kdir in sorted(p for p in kernels.iterdir() if p.is_dir()):
+        if not (kdir / "kernel.py").exists():
+            continue
+        name = kdir.name
+        for required in ("ops.py", "ref.py"):
+            if not (kdir / required).exists():
+                out.append(
+                    Violation(
+                        rule="kernel-ref", subject=f"kernels/{name}",
+                        message=f"Pallas kernel package missing {required}",
+                        pass_name="source",
+                    )
+                )
+        if test_file is None:
+            continue
+        for mod in ("ops", "ref"):
+            if f"kernels.{name}.{mod}" not in test_text:
+                out.append(
+                    Violation(
+                        rule="kernel-ref", subject=f"kernels/{name}",
+                        message=(
+                            f"{test_file.name} never imports "
+                            f"kernels.{name}.{mod} — no bit-equality "
+                            "coverage against the ref oracle"
+                        ),
+                        pass_name="source",
+                    )
+                )
+    return out
+
+
+def lint_tree(
+    root: Union[str, pathlib.Path],
+    tests_dir: Optional[Union[str, pathlib.Path]] = None,
+) -> List[Violation]:
+    """Run every source rule over a package tree rooted at ``root``
+    (normally ``src/repro``).  ``tests_dir`` enables the kernel-ref
+    coverage check against ``test_kernels.py``."""
+    root = pathlib.Path(root)
+    tests = pathlib.Path(tests_dir) if tests_dir is not None else None
+    out: List[Violation] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel.startswith("analysis/"):
+            continue  # the analyzer is host-side tooling, not a hot path
+        out.extend(lint_file(path, rel))
+    out.extend(_check_kernel_refs(root, tests))
+    return out

@@ -182,9 +182,36 @@ class GraphStream:
         self._max_inflight = max_inflight if double_buffer else 0
         self._inflight: collections.deque = collections.deque()
         backend = self.ingest_backend
-        self._jit_update = jax.jit(
-            lambda live, s, d, w: live.update(s, d, w, backend=backend)
-        )
+        # Donate the live summary through the jit boundary: the update is a
+        # scatter-add into the (d, w_r, w_c) counters, so XLA writes them in
+        # place instead of allocating a full copy per batch.  Two wrinkles:
+        # square sketches alias col_hash to row_hash, and donating the same
+        # buffer twice is an XLA error — so the boundary dispatches over the
+        # DEDUPLICATED leaf tuple and rebuilds the pytree on both sides.
+        # And the double-buffer queue must not hold the counters themselves
+        # (they become the donated, hence deleted, inputs of the next
+        # dispatch), so the update also returns a tiny completion token the
+        # queue blocks on instead.
+        live0 = self._window if self._window is not None else self._sketch
+        leaves0, treedef = jax.tree_util.tree_flatten(live0)
+        seen: Dict[int, int] = {}
+        slots = []       # leaf position -> unique-buffer slot
+        uniq_idx = []    # unique-buffer slot -> first leaf position
+        for i, leaf in enumerate(leaves0):
+            j = seen.setdefault(id(leaf), len(uniq_idx))
+            if j == len(uniq_idx):
+                uniq_idx.append(i)
+            slots.append(j)
+        self._live_treedef = treedef
+        self._uniq_leaf_idx = tuple(uniq_idx)
+        slots = tuple(slots)
+
+        def _update(uniq, s, d, w):
+            live = jax.tree_util.tree_unflatten(treedef, [uniq[j] for j in slots])
+            new = live.update(s, d, w, backend=backend)
+            return jax.tree_util.tree_leaves(new), jnp.sum(w)
+
+        self._jit_update = jax.jit(_update, donate_argnums=0)
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -239,6 +266,13 @@ class GraphStream:
 
     # -- ingest ---------------------------------------------------------------
 
+    def _dispatch_update(self, live, s, d, w):
+        """One donated ingest dispatch: live pytree -> (new live, token)."""
+        leaves = jax.tree_util.tree_leaves(live)
+        uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
+        new_leaves, token = self._jit_update(uniq, s, d, w)
+        return jax.tree_util.tree_unflatten(self._live_treedef, new_leaves), token
+
     def ingest(self, src, dst, weights=None) -> IngestReceipt:
         """Fold one edge batch into the summary.  ``src``/``dst`` are label
         batches (str or int — encoded here by the key codec); returns as
@@ -284,11 +318,11 @@ class GraphStream:
             self._sketch = distributed_ingest(self._mesh, self._sketch, s, d, w)
             self._inflight.append(self._sketch.counters)
         elif self._window is not None:
-            self._window = self._jit_update(self._window, s, d, w)
-            self._inflight.append(self._window.slices)
+            self._window, token = self._dispatch_update(self._window, s, d, w)
+            self._inflight.append(token)
         else:
-            self._sketch = self._jit_update(self._sketch, s, d, w)
-            self._inflight.append(self._sketch.counters)
+            self._sketch, token = self._dispatch_update(self._sketch, s, d, w)
+            self._inflight.append(token)
         while len(self._inflight) > self._max_inflight:
             jax.block_until_ready(self._inflight.popleft())
         self.stats.edges_ingested += int(s.shape[0])
@@ -337,6 +371,11 @@ class GraphStream:
             return []
         self.flush()
         t0 = time.time()
+        if any(q.family == "reach" for q in batch):
+            # Sync the closure cache from the session's touched-key delta so
+            # one-shot reach pulls ride the same incremental refresh as
+            # standing subscriptions instead of re-squaring the closure.
+            self._ensure_closure()
         results = execute(self.engine, self._live(), batch, epoch=self._epoch)
         self.stats.query_s += time.time() - t0
         self._count_served(results)

@@ -112,10 +112,12 @@ def k_hop_reach(adj: jax.Array, k: int) -> jax.Array:
     the GNN sampler integration)."""
     a = (adj > 0)
     w = adj.shape[-1]
-    out = a | jnp.eye(w, dtype=bool)
-    for _ in range(max(0, k - 1)):
+    init = a | jnp.eye(w, dtype=bool)
+
+    def hop(_, out):
         prod = jnp.einsum(
             "...ik,...kj->...ij", out.astype(jnp.float32), a.astype(jnp.float32)
         )
-        out = out | (prod > 0)
-    return out
+        return out | (prod > 0)
+
+    return jax.lax.fori_loop(0, max(0, k - 1), hop, init)

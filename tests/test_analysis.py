@@ -1,0 +1,427 @@
+"""Tests for the static-analysis plane (repro.analysis).
+
+Every rule gets a positive fixture (violates exactly that rule) and a
+clean twin (negative), plus an end-to-end run over the real ``src/repro``
+tree asserting zero unbaselined violations — the same gate CI runs.
+"""
+import json
+import pathlib
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    ENTRY_POINTS,
+    EntryPoint,
+    TracedEntry,
+    lint_file,
+    lint_tree,
+    reduces_full_counters,
+    run_jaxpr_pass,
+)
+from repro.analysis.contracts import (
+    Violation,
+    apply_baseline,
+    check_retrace_query_families,
+)
+from repro.analysis.jaxpr_lint import check_entry_point
+from repro.analysis.runner import main, run_analysis
+
+SRC_REPRO = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+TESTS_DIR = pathlib.Path(__file__).resolve().parent
+
+
+def _rules(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# jaxpr pass — one positive + one negative per contract
+# ---------------------------------------------------------------------------
+
+
+def _ep(name, contracts, entry):
+    return EntryPoint(name=name, contracts=contracts, build=lambda: entry)
+
+
+def test_no_host_callback_positive_and_negative():
+    x = jnp.ones(4)
+
+    def dirty(a):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(a.shape, a.dtype), a
+        )
+
+    bad = check_entry_point(
+        _ep("fix.cb", ("no-host-callback",), TracedEntry(dirty, (x,)))
+    )
+    assert _rules(bad) == ["no-host-callback"]
+    good = check_entry_point(
+        _ep("fix.clean", ("no-host-callback",), TracedEntry(lambda a: a + 1, (x,)))
+    )
+    assert good == []
+
+
+def test_no_wide_dtype_positive_and_negative():
+    from jax.experimental import enable_x64
+
+    x = jnp.ones(4)
+
+    def dirty(a):
+        with enable_x64():
+            return a.astype(jnp.float64) * 2.0
+
+    bad = check_entry_point(
+        _ep("fix.wide", ("no-wide-dtype",), TracedEntry(dirty, (x,)))
+    )
+    assert _rules(bad) == ["no-wide-dtype"]
+    good = check_entry_point(
+        _ep("fix.narrow", ("no-wide-dtype",), TracedEntry(lambda a: a * 2.0, (x,)))
+    )
+    assert good == []
+
+
+def test_no_counter_reduction_positive_and_negative():
+    counters = jnp.ones((2, 8, 8))
+    shape = (2, 8, 8)
+    bad = check_entry_point(
+        _ep(
+            "fix.reduce",
+            ("no-counter-reduction",),
+            TracedEntry(lambda c: jnp.sum(c), (counters,), counters_shape=shape),
+        )
+    )
+    assert _rules(bad) == ["no-counter-reduction"]
+    good = check_entry_point(
+        _ep(
+            "fix.gather",
+            ("no-counter-reduction",),
+            TracedEntry(lambda c: c[:, 0, 0], (counters,), counters_shape=shape),
+        )
+    )
+    assert good == []
+    # the test-facing helper agrees (used by test_query_engine.py)
+    assert reduces_full_counters(lambda c: jnp.sum(c), shape, counters)
+    assert not reduces_full_counters(lambda c: c[:, 0, 0], shape, counters)
+
+
+def test_collectives_only_under_shard_map():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    # pmap's psum sits OUTSIDE any shard_map region -> violation
+    naked = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")
+    bad = check_entry_point(
+        _ep(
+            "fix.naked_psum",
+            ("collectives-under-shard-map",),
+            TracedEntry(naked, (jnp.ones((1, 4)),)),
+        )
+    )
+    assert _rules(bad) == ["collectives-under-shard-map"]
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    sharded = shard_map(
+        lambda x: jax.lax.psum(x, "data"),
+        mesh=mesh,
+        in_specs=P("data"),
+        out_specs=P(),
+    )
+    good = check_entry_point(
+        _ep(
+            "fix.sharded_psum",
+            ("collectives-under-shard-map",),
+            TracedEntry(sharded, (jnp.ones(4),)),
+        )
+    )
+    assert good == []
+
+
+def test_donation_applied_positive_and_negative():
+    x = jnp.ones((8, 8))
+    undonated = jax.jit(lambda a: a + 1.0)
+    bad = check_entry_point(
+        _ep(
+            "fix.undonated",
+            ("donation-applied",),
+            TracedEntry(undonated, (x,), jit_fn=undonated),
+        )
+    )
+    assert _rules(bad) == ["donation-applied"]
+    donated = jax.jit(lambda a: a + 1.0, donate_argnums=0)
+    good = check_entry_point(
+        _ep(
+            "fix.donated",
+            ("donation-applied",),
+            TracedEntry(donated, (x,), jit_fn=donated),
+        )
+    )
+    assert good == []
+
+
+def test_retrace_detector_flags_salted_cache():
+    from repro.core import queries
+    from repro.core.query_engine import QueryEngine
+
+    class RetracingEngine:
+        """Minimal engine whose jit cache is salted per call — every
+        dispatch re-traces, the exact failure mode the detector exists
+        to catch."""
+
+        def __init__(self, backend, pad_q=8):
+            self._jits = {}
+            self._calls = 0
+
+        def _fn(self, family, fn):
+            return self._jits.setdefault(
+                family, jax.jit(fn, static_argnames=("salt",))
+            )
+
+        def _call(self, family, fn, *args):
+            self._calls += 1
+            return self._fn(family, fn)(*args, salt=self._calls)
+
+        def edge(self, sk, src, dst):
+            return self._call(
+                "edge", lambda s, a, b, salt: queries.edge_query(s, a, b), sk, src, dst
+            )
+
+        def in_flow(self, sk, keys):
+            return self._call(
+                "in_flow", lambda s, k, salt: queries.node_in_flow(s, k), sk, keys
+            )
+
+        def out_flow(self, sk, keys):
+            return self._call(
+                "out_flow", lambda s, k, salt: queries.node_out_flow(s, k), sk, keys
+            )
+
+        def flow(self, sk, keys):
+            return self._call(
+                "flow", lambda s, k, salt: queries.node_flow(s, k), sk, keys
+            )
+
+        def heavy_rel_vec(self, sk, keys, thetas):
+            return self._call(
+                "heavy_rel_vec",
+                lambda s, k, t, salt: queries.check_heavy_keys_rel_vec(s, k, t),
+                sk, keys, thetas,
+            )
+
+    bad = check_retrace_query_families(RetracingEngine)
+    assert bad and all(v.rule == "retrace" for v in bad)
+    assert check_retrace_query_families(QueryEngine) == []
+
+
+# ---------------------------------------------------------------------------
+# source pass — fixture trees, one rule each
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, rel, body):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+    return p
+
+
+def test_direct_jit_rule(tmp_path):
+    bad = _write(
+        tmp_path, "core/adhoc.py",
+        """
+        import jax
+
+        def f(fn):
+            return jax.jit(fn)
+        """,
+    )
+    assert _rules(lint_file(bad, "core/adhoc.py")) == ["direct-jit"]
+    # the engine cache module is allowed; so is code outside the scoped dirs
+    assert lint_file(bad, "core/query_engine.py") == []
+    assert lint_file(bad, "launch/adhoc.py") == []
+
+
+def test_host_sync_rule(tmp_path):
+    bad = _write(
+        tmp_path, "kernels/foo/ops.py",
+        """
+        def f(x):
+            return x.item()
+        """,
+    )
+    assert _rules(lint_file(bad, "kernels/foo/ops.py")) == ["host-sync"]
+    bad_np = _write(
+        tmp_path, "core/reach_bad.py",
+        """
+        import numpy as np
+
+        def f(x):
+            return np.asarray(x)
+        """,
+    )
+    assert _rules(lint_file(bad_np, "core/reach.py")) == ["host-sync"]
+    # api/ modules stage host<->device transfers by design: out of scope
+    assert lint_file(bad, "api/stream.py") == []
+    clean = _write(
+        tmp_path, "kernels/foo/clean_ops.py",
+        """
+        import jax.numpy as jnp
+
+        def f(x):
+            return jnp.sum(x)
+        """,
+    )
+    assert lint_file(clean, "kernels/foo/clean_ops.py") == []
+
+
+def test_jnp_in_loop_rule(tmp_path):
+    bad = _write(
+        tmp_path, "core/hot.py",
+        """
+        import jax.numpy as jnp
+
+        def f(xs):
+            out = []
+            for x in xs:
+                out.append(jnp.sum(x))
+            return out
+        """,
+    )
+    assert _rules(lint_file(bad, "core/hot.py")) == ["jnp-in-loop"]
+    clean = _write(
+        tmp_path, "core/cold.py",
+        """
+        import jax.numpy as jnp
+
+        def f(xs):
+            return jnp.sum(jnp.stack(list(xs)))
+        """,
+    )
+    assert lint_file(clean, "core/cold.py") == []
+    # api/ is not a hot module for this rule
+    assert lint_file(bad, "api/hot.py") == []
+
+
+def test_env_read_rule(tmp_path):
+    bad = _write(
+        tmp_path, "api/cfg.py",
+        """
+        import os
+
+        def f():
+            return os.environ.get("REPRO_QUERY_BACKEND", "")
+        """,
+    )
+    assert _rules(lint_file(bad, "api/cfg.py")) == ["env-read"]
+    bad_sub = _write(
+        tmp_path, "api/cfg2.py",
+        """
+        import os
+
+        def f():
+            return os.environ["REPRO_INGEST_BACKEND"]
+        """,
+    )
+    assert _rules(lint_file(bad_sub, "api/cfg2.py")) == ["env-read"]
+    # the dispatch boundaries are allowed; non-REPRO vars anywhere are fine
+    assert lint_file(bad, "core/ingest.py") == []
+    clean = _write(
+        tmp_path, "api/cfg3.py",
+        """
+        import os
+
+        def f():
+            return os.environ.get("HOME", "")
+        """,
+    )
+    assert lint_file(clean, "api/cfg3.py") == []
+
+
+def test_kernel_ref_rule(tmp_path):
+    root = tmp_path / "pkg"
+    _write(root, "kernels/newk/kernel.py", "def k():\n    return 0\n")
+    _write(root, "kernels/newk/ops.py", "def op():\n    return 0\n")
+    tests = tmp_path / "tests"
+    _write(tmp_path, "tests/test_kernels.py", "# no imports of newk\n")
+    found = lint_tree(root, tests)
+    assert _rules(found) == ["kernel-ref"]
+    # missing ref.py + neither ops nor ref imported by the harness
+    assert len(found) == 3
+
+    _write(root, "kernels/newk/ref.py", "def k_ref():\n    return 0\n")
+    _write(
+        tmp_path, "tests/test_kernels.py",
+        """
+        from pkg.kernels.newk.ops import op
+        from pkg.kernels.newk.ref import k_ref
+        """,
+    )
+    assert lint_tree(root, tests) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanism + CLI + end-to-end gate
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_marks_but_keeps_violations():
+    v = Violation(rule="direct-jit", subject="core/x.py::f:3", message="m",
+                  pass_name="source")
+    out = apply_baseline([v], {("direct-jit", "core/x.py::f:3"): "why"})
+    assert out[0].baselined and out[0].justification == "why"
+    out2 = apply_baseline([v], {("direct-jit", "core/other.py::f:3"): "why"})
+    assert not out2[0].baselined
+
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    bad_root = tmp_path / "pkg"
+    _write(
+        bad_root, "core/adhoc.py",
+        """
+        import jax
+
+        def f(fn):
+            return jax.jit(fn)
+        """,
+    )
+    report_path = tmp_path / "report.json"
+    rc = main([
+        "--passes", "source", "--root", str(bad_root),
+        "--format", "json", "--output", str(report_path),
+    ])
+    assert rc == 1
+    report = json.loads(report_path.read_text())
+    assert not report["ok"]
+    assert report["counts"]["violations"] == 1
+    assert report["violations"][0]["rule"] == "direct-jit"
+
+    clean_root = tmp_path / "pkg2"
+    _write(clean_root, "core/clean.py", "def f():\n    return 0\n")
+    assert main(["--passes", "source", "--root", str(clean_root)]) == 0
+
+
+def test_jaxpr_pass_respects_entry_point_override():
+    counters = jnp.ones((2, 8, 8))
+    eps = (
+        _ep(
+            "fix.reduce",
+            ("no-counter-reduction",),
+            TracedEntry(lambda c: jnp.sum(c), (counters,), counters_shape=(2, 8, 8)),
+        ),
+    )
+    found = run_jaxpr_pass(eps)
+    assert _rules(found) == ["no-counter-reduction"]
+
+
+def test_end_to_end_repo_is_clean():
+    """The CI gate: both passes over the real tree, zero unbaselined."""
+    report = run_analysis(("jaxpr", "source"), root=SRC_REPRO, tests_dir=TESTS_DIR)
+    new = [v for v in report["violations"] if not v["baselined"]]
+    assert report["ok"], "unbaselined violations:\n" + "\n".join(
+        f"{v['rule']} {v['subject']}: {v['message']}" for v in new
+    )
+    # the registry really covers the engine surface
+    assert report["counts"]["entry_points"] == len(ENTRY_POINTS) >= 24

@@ -482,3 +482,39 @@ def test_delete_resolves_backend_through_engine(monkeypatch):
     np.testing.assert_array_equal(
         np.asarray(sk.row_flows), np.asarray(oracle.row_flows)
     )
+
+
+def test_one_shot_reach_rides_incremental_closure_refresh():
+    """One-shot Query.reach pulls sync the closure from the session's
+    touched-key delta: one full build on first use, touched-row refreshes
+    afterwards — never a second re-squaring on an additions-only stream."""
+    gs = GraphStream.open(
+        SketchConfig(depth=2, width_rows=64, width_cols=64),
+        ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 40, 64).astype(np.uint32)
+    dst = rng.integers(0, 40, 64).astype(np.uint32)
+    gs.ingest(src, dst)
+
+    r0 = gs.query(Query.reach(int(src[0]), int(dst[0])))
+    assert gs.engine.closure_refreshes == 1
+    assert gs.engine.closure_incremental_refreshes == 0
+
+    gs.ingest(rng.integers(0, 40, 8).astype(np.uint32),
+              rng.integers(0, 40, 8).astype(np.uint32))
+    r1 = gs.query(Query.reach(int(src[0]), int(dst[0])))
+    assert gs.engine.closure_refreshes == 1, "reach pull re-squared the closure"
+    assert gs.engine.closure_incremental_refreshes == 1
+
+    # refreshed closure answers match the from-scratch oracle
+    from repro.core import reach as reach_mod
+
+    oracle = reach_mod.reach_query(
+        gs.sketch,
+        jnp.asarray([fnv1a_label(int(src[0]))], jnp.uint32),
+        jnp.asarray([fnv1a_label(int(dst[0]))], jnp.uint32),
+    )
+    assert bool(np.asarray(r1.value)) == bool(np.asarray(oracle)[0])
+    assert isinstance(r0, QueryResult)

@@ -139,32 +139,10 @@ def test_window_registers_bitmatch(seed, ops):
 # ---------------------------------------------------------------------------
 
 
-def _walk_jaxprs(jaxpr):
-    yield jaxpr
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else (v,)
-            for item in vs:
-                inner = getattr(item, "jaxpr", None)
-                if inner is not None:
-                    yield from _walk_jaxprs(inner)
-                elif hasattr(item, "eqns"):
-                    yield from _walk_jaxprs(item)
-
-
-def _reduces_full_counters(fn, counters_shape, *args):
-    """True if any reduction primitive in fn's jaxpr consumes an operand of
-    the full (d, w_r, w_c) counter shape."""
-    closed = jax.make_jaxpr(fn)(*args)
-    for j in _walk_jaxprs(closed.jaxpr):
-        for eqn in j.eqns:
-            if not eqn.primitive.name.startswith("reduce_"):
-                continue
-            for v in eqn.invars:
-                aval = getattr(v, "aval", None)
-                if aval is not None and tuple(aval.shape) == counters_shape:
-                    return True
-    return False
+# The jaxpr walking + reduction detection lives in the shared analysis
+# plane now (repro.analysis.jaxpr_lint drives it over the whole entry-point
+# registry); this test keeps the focused per-family assertions.
+from repro.analysis import reduces_full_counters as _reduces_full_counters
 
 
 def test_point_queries_have_no_counter_reduction():
