@@ -1,28 +1,45 @@
 """Ingest-path benchmarks (paper Section 3.2 constraints): µs/edge and
-edges/sec for the paper-faithful scalar path and every IngestEngine backend
+edges/sec for the paper-faithful scalar path, every IngestEngine backend
 (scatter / onehot / pallas — Pallas runs in interpret mode on CPU hosts, so
-its number here is a CORRECTNESS artifact; its perf claim is the roofline).
+its number here is a CORRECTNESS artifact; its perf claim is the roofline),
+and the heavy-tail fast path (host pre-aggregation feeding the donated
+session boundary; fused one-pass kernel on TPU hosts).
+
+Every row separates COMPILE from STEADY STATE: the first call is timed on
+its own (``compile_ms``) and the recorded µs/edge is the median of warm
+calls only — mixing the two understated the scatter path and buried the
+onehot regression the fast path fixes.
 
 CLI (the backend-sweep mode):
 
     python -m benchmarks.bench_ingest --backend scatter
     python -m benchmarks.bench_ingest --backend all --batch 65536
+    python -m benchmarks.bench_ingest --assert-preagg-win --batch 8192
 
-reports edges/sec per requested backend; ``run()`` (the trajectory entry
-point) sweeps all backends so results/benchmarks.json records edges/sec per
-backend from every run.
+``--assert-preagg-win`` exits non-zero unless the pre-aggregated session
+path beats the plain scatter session on a zipf(1.5) batch — the CI smoke
+gate for the fast path.
+
+``run()`` (the trajectory entry point) sweeps all backends plus the
+pre-aggregation duplicate-rate grid, so results/benchmarks.json records
+edges/sec per (backend, preagg, stream) from every run.
 """
 from __future__ import annotations
 
 import argparse
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import record, time_fn
+from benchmarks.common import record, time_fn, zipf_stream
+from repro.api.stream import GraphStream
 from repro.core import GLavaSketch, SketchConfig
 from repro.core.ingest import BACKENDS
+
+DEPTH, WIDTH = 4, 1024
 
 
 def _stream(b: int, seed: int = 0):
@@ -34,10 +51,23 @@ def _stream(b: int, seed: int = 0):
     )
 
 
-def backend_sweep(backends=BACKENDS, batch: int = 32768, depth: int = 4,
-                  width: int = 1024):
-    """Time every requested ingest backend on one edge batch; records and
-    returns {backend: edges_per_s}."""
+def _zipf(b: int, a: float, seed: int = 3):
+    st = zipf_stream(1 << 20, b, seed=seed, a=a)
+    return st["src"], st["dst"], st["weight"]
+
+
+def _compile_then_steady(fn, *args, iters: int = 5):
+    """(compile_ms, steady_us): first call timed alone, then warm medians."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_ms = (time.perf_counter() - t0) * 1e3
+    return compile_ms, time_fn(fn, *args, iters=iters, warmup=1)
+
+
+def backend_sweep(backends=BACKENDS, batch: int = 32768, depth: int = DEPTH,
+                  width: int = WIDTH):
+    """Steady-state edges/sec for every requested ingest backend on one
+    uniform edge batch (pre-aggregation off — the raw engine number)."""
     cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
     sk = GLavaSketch.empty(cfg, jax.random.key(0))
     out = {}
@@ -45,10 +75,12 @@ def backend_sweep(backends=BACKENDS, batch: int = 32768, depth: int = 4,
         b = batch if backend != "pallas" or jax.default_backend() == "tpu" else min(batch, 4096)
         src, dst, w = _stream(b)
         fn = jax.jit(
-            lambda s, a, d_, w_, bk=backend: s.update(a, d_, w_, backend=bk)
+            lambda s, a, d_, w_, bk=backend: s.update(
+                a, d_, w_, backend=bk, preagg="off"
+            )
         )
-        iters = 2 if backend == "pallas" else 3
-        us = time_fn(fn, sk, src, dst, w, iters=iters)
+        iters = 2 if backend == "pallas" else 5
+        compile_ms, us = _compile_then_steady(fn, sk, src, dst, w, iters=iters)
         eps = b / (us / 1e6)
         out[backend] = eps
         extra = (
@@ -58,13 +90,86 @@ def backend_sweep(backends=BACKENDS, batch: int = 32768, depth: int = 4,
         )
         record(
             f"ingest_backend_{backend}", us / b, batch=b,
-            edges_per_s=round(eps), **extra,
+            edges_per_s=round(eps), preagg="off",
+            compile_ms=round(compile_ms, 1), **extra,
         )
     return out
 
 
+def preagg_grid(batch: int = 32768, depth: int = DEPTH, width: int = WIDTH):
+    """Backend × preagg-on/off × duplicate-rate grid at the sketch.update
+    level (the IN-JIT collapse: sort + segment-sum under the same trace)."""
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    streams = {
+        "uniform": _stream(batch),
+        "zipf1.0": tuple(jnp.asarray(x) for x in _zipf(batch, 1.0)),
+        "zipf1.5": tuple(jnp.asarray(x) for x in _zipf(batch, 1.5)),
+    }
+    for backend in ("scatter", "onehot"):
+        for stream_name, (src, dst, w) in streams.items():
+            for preagg in ("off", "on"):
+                fn = jax.jit(
+                    lambda s, a, d_, w_, bk=backend, pa=preagg: s.update(
+                        a, d_, w_, backend=bk, preagg=pa
+                    )
+                )
+                compile_ms, us = _compile_then_steady(fn, sk, src, dst, w)
+                record(
+                    f"ingest_{backend}_{stream_name}_preagg_{preagg}",
+                    us / batch, batch=batch, stream=stream_name,
+                    preagg=preagg, edges_per_s=round(batch / (us / 1e6)),
+                    compile_ms=round(compile_ms, 1),
+                )
+
+
+def session_rate(zipf_a: float, batch: int, preagg: str, depth: int = DEPTH,
+                 width: int = WIDTH, ingest_backend: str = "scatter"):
+    """edges/sec through the REAL session boundary (GraphStream.ingest →
+    host collapse → donated jit dispatch → flush), steady state."""
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    gs = GraphStream.open(
+        cfg, ingest_backend=ingest_backend, query_backend="jnp", preagg=preagg
+    )
+    src, dst, w = _zipf(batch, zipf_a)
+
+    def step():
+        gs.ingest(src, dst, w)
+        gs.flush()
+        return gs._sketch.counters
+
+    compile_ms, us = _compile_then_steady(step)
+    return compile_ms, us, batch / (us / 1e6)
+
+
+def preagg_session_rows(batch: int = 32768):
+    """The tentpole rows: the session fast path on heavy-tail streams, with
+    the preagg-off session as the like-for-like comparison."""
+    rows = {}
+    for name, zipf_a, preagg in (
+        ("ingest_preagg_zipf1.5", 1.5, "on"),
+        ("ingest_preagg_zipf1.0", 1.0, "on"),
+        ("ingest_session_plain_zipf1.5", 1.5, "off"),
+    ):
+        compile_ms, us, eps = session_rate(zipf_a, batch, preagg)
+        rows[name] = eps
+        record(
+            name, us / batch, batch=batch, preagg=preagg,
+            edges_per_s=round(eps), compile_ms=round(compile_ms, 1),
+        )
+    if jax.default_backend() == "tpu":
+        compile_ms, us, eps = session_rate(
+            1.5, batch, "auto", ingest_backend="fused"
+        )
+        record(
+            "ingest_fused_zipf1.5", us / batch, batch=batch,
+            edges_per_s=round(eps), compile_ms=round(compile_ms, 1),
+        )
+    return rows
+
+
 def run():
-    cfg = SketchConfig(depth=4, width_rows=1024, width_cols=1024)
+    cfg = SketchConfig(depth=DEPTH, width_rows=WIDTH, width_cols=WIDTH)
     sk = GLavaSketch.empty(cfg, jax.random.key(0))
     b = 32768
     src, dst, w = _stream(b)
@@ -78,8 +183,14 @@ def run():
     # edges/sec record)
     backend_sweep(batch=b)
 
+    # backend × preagg × duplicate-rate grid + the session fast-path rows
+    preagg_grid(batch=b)
+    preagg_session_rows(batch=b)
+
     # O(1)-per-edge invariant: per-edge cost must not grow with sketch fill
-    scat = jax.jit(lambda s, a, d_, w_: s.update(a, d_, w_, backend="scatter"))
+    scat = jax.jit(
+        lambda s, a, d_, w_: s.update(a, d_, w_, backend="scatter", preagg="off")
+    )
     filled = sk.update(src, dst, w)
     us_empty = time_fn(scat, sk, src, dst, w)
     us_full = time_fn(scat, filled, src, dst, w)
@@ -98,9 +209,26 @@ def main():
     ap.add_argument("--backend", choices=list(BACKENDS) + ["all"], default="all",
                     help="ingest backend to time (default: sweep all)")
     ap.add_argument("--batch", type=int, default=32768)
-    ap.add_argument("--depth", type=int, default=4)
-    ap.add_argument("--width", type=int, default=1024)
+    ap.add_argument("--depth", type=int, default=DEPTH)
+    ap.add_argument("--width", type=int, default=WIDTH)
+    ap.add_argument(
+        "--assert-preagg-win", action="store_true",
+        help="CI gate: fail unless the pre-aggregated session path beats "
+             "the plain scatter session on a zipf(1.5) batch",
+    )
     args = ap.parse_args()
+    if args.assert_preagg_win:
+        _, _, eps_on = session_rate(1.5, args.batch, "on",
+                                    depth=args.depth, width=args.width)
+        _, _, eps_off = session_rate(1.5, args.batch, "off",
+                                     depth=args.depth, width=args.width)
+        print(f"preagg on:  {eps_on:,.0f} edges/s")
+        print(f"preagg off: {eps_off:,.0f} edges/s  ({eps_on / eps_off:.2f}x)")
+        if eps_on < eps_off:
+            print("FAIL: pre-aggregation lost to the plain scatter session")
+            sys.exit(1)
+        print("OK: pre-aggregation wins")
+        return
     backends = BACKENDS if args.backend == "all" else (args.backend,)
     eps = backend_sweep(backends, args.batch, args.depth, args.width)
     for k, v in eps.items():

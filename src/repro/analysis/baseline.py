@@ -30,6 +30,8 @@ BASELINE: Dict[Tuple[str, str], str] = {
         "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
     ("direct-jit", "kernels/ingest/kernel.py::ingest_pallas:58"):
         "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
+    ("direct-jit", "kernels/ingest_fused/kernel.py::fused_ingest_pallas:97"):
+        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
     # _run_padded's chunk loop runs on the HOST between jit dispatches by
     # design: it bounds the number of distinct padded shapes the jit cache
     # ever sees (DESIGN.md Section 5); jnp.pad here prepares the next

@@ -181,6 +181,78 @@ def _ingest_jit_boundary() -> TracedEntry:
     )
 
 
+def _preagg_entry() -> TracedEntry:
+    """In-jit pre-aggregation: sort + segment-sum collapse, static shapes."""
+    from repro.core.ingest import preaggregate_edges
+
+    _, src, dst, w = _fixture_sketch()
+    return TracedEntry(
+        lambda s, d, ww: preaggregate_edges(s, d, ww, out_size=4),
+        (src, dst, w),
+    )
+
+
+def _preagg_update_entry() -> TracedEntry:
+    """The full pre-aggregated update (collapse + cond + scatter)."""
+    sk, src, dst, w = _fixture_sketch()
+    return TracedEntry(
+        lambda s, d, ww: sk.update(
+            s, d, ww, backend="scatter", preagg="on"
+        ).counters,
+        (src, dst, w),
+        tuple(sk.counters.shape),
+    )
+
+
+def _preagg_jit_boundary() -> TracedEntry:
+    """The GraphStream host-collapsed dispatch boundary — the REAL session
+    callable, so the donation contract breaks if ``_jit_update_pre`` stops
+    donating the sketch pytree."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api.stream import GraphStream
+    from repro.core.ingest import preaggregate_host
+    from repro.core.sketch import SketchConfig
+
+    gs = GraphStream.open(
+        SketchConfig(
+            depth=_FIXTURE_DEPTH,
+            width_rows=_FIXTURE_WIDTH,
+            width_cols=_FIXTURE_WIDTH,
+        ),
+        ingest_backend="scatter",
+        query_backend="jnp",
+    )
+    _, src, dst, w = _fixture_sketch()
+    pre = preaggregate_host(np.asarray(src), np.asarray(dst), np.asarray(w))
+    leaves = jax.tree_util.tree_leaves(gs._sketch)
+    uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
+    args = (
+        uniq,
+        jnp.asarray(pre.src),
+        jnp.asarray(pre.dst),
+        jnp.asarray(pre.weights),
+        jnp.asarray(pre.src_unique),
+        jnp.asarray(pre.src_totals),
+        jnp.asarray(pre.dst_unique),
+        jnp.asarray(pre.dst_totals),
+    )
+    return TracedEntry(
+        fn=gs._jit_update_pre, args=args, jit_fn=gs._jit_update_pre
+    )
+
+
+def _fused_update_entry() -> TracedEntry:
+    """The fused one-pass session update (ref twin off TPU)."""
+    sk, src, dst, w = _fixture_sketch()
+    return TracedEntry(
+        lambda s, d, ww: sk.update_fused(s, d, ww)[0].counters,
+        (src, dst, w),
+        tuple(sk.counters.shape),
+    )
+
+
 def _query_entry(family: str) -> Callable[[], TracedEntry]:
     def build():
         import jax.numpy as jnp
@@ -273,6 +345,16 @@ def _kernel_entry(name: str) -> Callable[[], TracedEntry]:
             return TracedEntry(
                 lambda c: ops.flows(c, interpret=True), (sk.counters,)
             )
+        if name == "ingest_fused":
+            from repro.kernels.ingest_fused import ops
+
+            rows, cols = sk.hash_edges(src, dst)
+            return TracedEntry(
+                lambda c, rf, cf, r, cc, ww: ops.fused_ingest(
+                    c, rf, cf, r, cc, ww, interpret=True
+                ),
+                (sk.counters, sk.row_flows, sk.col_flows, rows, cols, w),
+            )
         if name == "countsketch":
             from repro.kernels.countsketch import ops
 
@@ -327,6 +409,15 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
     EntryPoint(
         "ingest.jit_boundary", HOT + ("donation-applied",), _ingest_jit_boundary
     ),
+    # -- the heavy-tail fast path: pre-aggregation + fused one-pass ingest --
+    EntryPoint("ingest.preagg", HOT, _preagg_entry),
+    EntryPoint("ingest.preagg_update", HOT, _preagg_update_entry),
+    EntryPoint(
+        "ingest.preagg_boundary",
+        HOT + ("donation-applied",),
+        _preagg_jit_boundary,
+    ),
+    EntryPoint("ingest.fused_update", HOT, _fused_update_entry),
     # -- every QueryEngine family -----------------------------------------
     EntryPoint("query.edge", HOT, _query_entry("edge")),
     EntryPoint("query.edge.pallas", HOT, _query_entry("edge.pallas")),
@@ -348,6 +439,9 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
     EntryPoint("query.closure_refresh", HOT, _query_entry("closure_refresh")),
     # -- every kernels/*/ops.py wrapper (interpret-mode trace) -------------
     EntryPoint("kernels.ingest.ops", HOT, _kernel_entry("ingest")),
+    EntryPoint(
+        "kernels.ingest_fused.ops", HOT, _kernel_entry("ingest_fused")
+    ),
     EntryPoint("kernels.query.ops", HOT, _kernel_entry("query")),
     EntryPoint("kernels.closure.ops", HOT, _kernel_entry("closure")),
     EntryPoint("kernels.flow.ops", HOT, _kernel_entry("flow")),

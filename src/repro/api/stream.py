@@ -62,7 +62,13 @@ from repro.api.subscription import (
     SubscriptionEvent,
 )
 from repro.core import queries as queries_mod
-from repro.core.ingest import resolve_backend, touched_row_keys
+from repro.core.ingest import (
+    pad_bucket,
+    preaggregate_host,
+    resolve_backend,
+    resolve_preagg,
+    touched_row_keys,
+)
 from repro.core.query_engine import QueryEngine
 from repro.core.sketch import GLavaSketch, SketchConfig
 from repro.core.window import SlidingWindowSketch
@@ -106,11 +112,17 @@ class IngestReceipt:
     row-width tracking cap, or the session had already stopped tracking
     (a prior non-additive mutation with no closure sync since).  The
     subscription plane feeds non-``None`` sets to the incremental closure
-    refresh; ``None`` forces the next refresh to rebuild from scratch."""
+    refresh; ``None`` forces the next refresh to rebuild from scratch.
+
+    Fused-ingest sessions (``ingest_backend="fused"``) report the delta as
+    ``touched_rows`` instead: the (d, w_r) bool row-bucket bitmap the
+    one-pass kernel emitted on device — no host unique pass at all.
+    ``touched_keys`` is ``None`` for those receipts."""
 
     epoch: int
     n_edges: int
     touched_keys: Optional[np.ndarray]
+    touched_rows: Optional[jax.Array] = None
 
 
 def _preset(name: str) -> SketchConfig:
@@ -147,6 +159,7 @@ class GraphStream:
         mesh: Optional[jax.sharding.Mesh] = None,
         double_buffer: bool = True,
         max_inflight: int = 2,
+        preagg: str = "auto",
     ):
         if mesh is not None and window_slices:
             raise ValueError("windowed + distributed sessions are not supported yet")
@@ -159,7 +172,19 @@ class GraphStream:
         else:
             self._window = None
             self._sketch = GLavaSketch.empty(config, jax.random.key(seed))
-        self.ingest_backend = resolve_backend(ingest_backend)
+        # "fused" is a session-level mode, not an IngestEngine backend: the
+        # one-pass kernel updates counters + registers + touched bitmap
+        # together, which only a plain local session can consume.
+        self._fused = ingest_backend == "fused"
+        if self._fused and (mesh is not None or window_slices):
+            raise ValueError("fused ingest needs a plain local session")
+        self.ingest_backend = (
+            "fused" if self._fused else resolve_backend(ingest_backend)
+        )
+        # Host-side pre-aggregation of duplicate (src, dst) pairs before
+        # dispatch ("auto" honours REPRO_INGEST_PREAGG, else batches >=
+        # PREAGG_MIN_BATCH) — the heavy-tail ingest fast path.
+        self._preagg = preagg
         self.engine = QueryEngine(query_backend)
         self.stats = StreamStats()
         self._mesh = mesh
@@ -206,12 +231,42 @@ class GraphStream:
         self._uniq_leaf_idx = tuple(uniq_idx)
         slots = tuple(slots)
 
-        def _update(uniq, s, d, w):
-            live = jax.tree_util.tree_unflatten(treedef, [uniq[j] for j in slots])
-            new = live.update(s, d, w, backend=backend)
-            return jax.tree_util.tree_leaves(new), jnp.sum(w)
+        if self._fused:
+
+            def _update(uniq, s, d, w):
+                live = jax.tree_util.tree_unflatten(
+                    treedef, [uniq[j] for j in slots]
+                )
+                new, touched = live.update_fused(s, d, w)
+                return jax.tree_util.tree_leaves(new), jnp.sum(w), touched
+
+        else:
+
+            def _update(uniq, s, d, w):
+                live = jax.tree_util.tree_unflatten(
+                    treedef, [uniq[j] for j in slots]
+                )
+                # In-jit pre-aggregation stays off HERE: the session already
+                # collapses heavy-tail batches host-side (below), so a
+                # second device sort would be pure overhead.
+                new = live.update(s, d, w, backend=backend, preagg="off")
+                return jax.tree_util.tree_leaves(new), jnp.sum(w)
 
         self._jit_update = jax.jit(_update, donate_argnums=0)
+
+        def _update_pre(uniq, s, d, w, su, sw, du, dw):
+            live = jax.tree_util.tree_unflatten(treedef, [uniq[j] for j in slots])
+            new = live.update_preaggregated(
+                s, d, w, su, sw, du, dw, backend=backend
+            )
+            return jax.tree_util.tree_leaves(new), jnp.sum(w)
+
+        # The host-collapsed fast path's donated boundary: distinct pairs
+        # feed the counter scatter, per-endpoint marginal totals feed the
+        # flow registers.  Arrays arrive padded to power-of-two buckets
+        # (pad_bucket) so variable collapse sizes cost a bounded trace
+        # ladder, not a retrace per batch.
+        self._jit_update_pre = jax.jit(_update_pre, donate_argnums=0)
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -267,10 +322,33 @@ class GraphStream:
     # -- ingest ---------------------------------------------------------------
 
     def _dispatch_update(self, live, s, d, w):
-        """One donated ingest dispatch: live pytree -> (new live, token)."""
+        """One donated ingest dispatch: live pytree -> (new live, token,
+        touched-row bitmap or None).  Fused sessions get the bitmap from
+        the one-pass kernel; plain sessions return None."""
         leaves = jax.tree_util.tree_leaves(live)
         uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
-        new_leaves, token = self._jit_update(uniq, s, d, w)
+        if self._fused:
+            new_leaves, token, touched = self._jit_update(uniq, s, d, w)
+        else:
+            new_leaves, token = self._jit_update(uniq, s, d, w)
+            touched = None
+        new = jax.tree_util.tree_unflatten(self._live_treedef, new_leaves)
+        return new, token, touched
+
+    def _dispatch_update_pre(self, live, pre):
+        """One donated dispatch of a host-collapsed batch (PreaggBatch).
+        Zero-weight bucket padding is exact: counters never hold -0.0, so
+        adding +0.0 anywhere is the identity."""
+        s = jnp.asarray(pad_bucket(pre.src))
+        d = jnp.asarray(pad_bucket(pre.dst))
+        w = jnp.asarray(pad_bucket(pre.weights))
+        su = jnp.asarray(pad_bucket(pre.src_unique))
+        sw = jnp.asarray(pad_bucket(pre.src_totals))
+        du = jnp.asarray(pad_bucket(pre.dst_unique))
+        dw = jnp.asarray(pad_bucket(pre.dst_totals))
+        leaves = jax.tree_util.tree_leaves(live)
+        uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
+        new_leaves, token = self._jit_update_pre(uniq, s, d, w, su, sw, du, dw)
         return jax.tree_util.tree_unflatten(self._live_treedef, new_leaves), token
 
     def ingest(self, src, dst, weights=None) -> IngestReceipt:
@@ -287,50 +365,111 @@ class GraphStream:
         t0 = time.time()
         s_np = np.atleast_1d(encode_labels(src))
         d_np = np.atleast_1d(encode_labels(dst))
-        s = jnp.asarray(s_np)
-        d = jnp.asarray(d_np)
-        if s.shape != d.shape:
-            raise ValueError(f"src/dst shape mismatch: {s.shape} vs {d.shape}")
-        w = (
-            jnp.ones(s.shape, jnp.float32)
-            if weights is None
-            else jnp.asarray(weights, jnp.float32)
-        )
-        # Only pay the host-side unique/sign scans while a touched-key
-        # delta can still be consumed; once tracking is poisoned (prior
-        # delete / overflow, no closure sync since) the set is discarded
-        # anyway and the hot ingest path skips it entirely.
-        touched = None
-        if self._touched is not None:
-            additive = weights is None or not bool(
-                np.any(np.asarray(weights) < 0)
+        if s_np.shape != d_np.shape:
+            raise ValueError(
+                f"src/dst shape mismatch: {s_np.shape} vs {d_np.shape}"
             )
-            if additive:
+        n_edges = int(s_np.shape[0])
+        w_np = (
+            np.ones(n_edges, np.float32)
+            if weights is None
+            else np.asarray(weights, np.float32)
+        )
+        additive = weights is None or not bool(np.any(w_np < 0))
+        # Heavy-tail fast path: collapse duplicate (src, dst) pairs on the
+        # host (we are already host-side for label encoding), so the device
+        # scatters one slot per distinct pair and the flow registers one
+        # slot per distinct endpoint.  Exact for signed weights.
+        pre = None
+        if resolve_preagg(self._preagg, batch=n_edges):
+            pre = preaggregate_host(s_np, d_np, w_np)
+        # Only pay the host-side unique scan while a touched-key delta can
+        # still be consumed; once tracking is poisoned (prior delete /
+        # overflow, no closure sync since) the set is discarded anyway and
+        # the hot ingest path skips it entirely.  The collapsed batch gives
+        # the unique sources for free; fused sessions skip all of this —
+        # their delta is the kernel's device-emitted bitmap.
+        touched = None
+        if self._touched is not None and additive and not self._fused:
+            if pre is not None:
+                if self.config.directed:
+                    touched = pre.src_unique
+                else:
+                    touched = np.unique(
+                        np.concatenate([pre.src_unique, pre.dst_unique])
+                    )
+                if touched.size > self.config.width_rows:
+                    touched = None
+            else:
                 touched = touched_row_keys(
                     s_np,
                     None if self.config.directed else d_np,
                     cap=self.config.width_rows,
                 )
+        touched_rows = None
         if self._mesh is not None:
             from repro.core.distributed import distributed_ingest
 
             self.flush()
-            self._sketch = distributed_ingest(self._mesh, self._sketch, s, d, w)
+            if pre is not None:
+                self._sketch = distributed_ingest(
+                    self._mesh,
+                    self._sketch,
+                    jnp.asarray(pre.src),
+                    jnp.asarray(pre.dst),
+                    jnp.asarray(pre.weights),
+                    preagg_marginals=(
+                        jnp.asarray(pre.src_unique),
+                        jnp.asarray(pre.src_totals),
+                        jnp.asarray(pre.dst_unique),
+                        jnp.asarray(pre.dst_totals),
+                    ),
+                )
+            else:
+                self._sketch = distributed_ingest(
+                    self._mesh,
+                    self._sketch,
+                    jnp.asarray(s_np),
+                    jnp.asarray(d_np),
+                    jnp.asarray(w_np),
+                )
             self._inflight.append(self._sketch.counters)
-        elif self._window is not None:
-            self._window, token = self._dispatch_update(self._window, s, d, w)
+        elif pre is not None and not self._fused:
+            live = self._window if self._window is not None else self._sketch
+            new, token = self._dispatch_update_pre(live, pre)
+            if self._window is not None:
+                self._window = new
+            else:
+                self._sketch = new
             self._inflight.append(token)
         else:
-            self._sketch, token = self._dispatch_update(self._sketch, s, d, w)
+            if pre is not None:  # fused + collapsed: pairs through the kernel
+                s = jnp.asarray(pad_bucket(pre.src))
+                d = jnp.asarray(pad_bucket(pre.dst))
+                w = jnp.asarray(pad_bucket(pre.weights))
+            else:
+                s, d, w = jnp.asarray(s_np), jnp.asarray(d_np), jnp.asarray(w_np)
+            live = self._window if self._window is not None else self._sketch
+            new, token, touched_rows = self._dispatch_update(live, s, d, w)
+            if self._window is not None:
+                self._window = new
+            else:
+                self._sketch = new
             self._inflight.append(token)
         while len(self._inflight) > self._max_inflight:
             jax.block_until_ready(self._inflight.popleft())
-        self.stats.edges_ingested += int(s.shape[0])
+        self.stats.edges_ingested += n_edges
         self.stats.ingest_s += time.time() - t0
         self._epoch += 1
-        self._note_touched(touched)
+        if self._fused:
+            self._note_touched(touched_rows if additive else None)
+        else:
+            self._note_touched(touched)
         receipt = IngestReceipt(
-            epoch=self._epoch, n_edges=int(s.shape[0]), touched_keys=touched
+            epoch=self._epoch,
+            n_edges=n_edges,
+            touched_keys=touched,
+            touched_rows=touched_rows if additive else None,
         )
         self._after_mutation()
         return receipt
@@ -443,18 +582,22 @@ class GraphStream:
     def _unsubscribe(self, sub: Subscription) -> None:
         self._subs.pop(sub.id, None)
 
-    def _note_touched(self, batch_keys: Optional[np.ndarray]) -> None:
-        """Accumulate one batch's touched keys for the next closure sync;
-        ``None`` (non-additive batch) or overflowing the row width forces
-        the next sync to rebuild from scratch."""
+    def _note_touched(self, batch_delta) -> None:
+        """Accumulate one batch's touched-row delta for the next closure
+        sync — a unique key array (plain sessions) or a (d, w_r) bool
+        device bitmap (fused sessions); ``None`` (non-additive batch) or
+        overflowing the row width forces the next sync to rebuild from
+        scratch."""
         if self._touched is None:
             return
-        if batch_keys is None:
+        if batch_delta is None:
             self._touched = None
             self._touched_count = 0
             return
-        self._touched.append(batch_keys)
-        self._touched_count += int(batch_keys.size)
+        self._touched.append(batch_delta)
+        if getattr(batch_delta, "ndim", 1) == 2:
+            return  # bitmap: bounded by (d, w_r), no overflow cap needed
+        self._touched_count += int(batch_delta.size)
         if self._touched_count > self.config.width_rows:
             self._touched = None
             self._touched_count = 0
@@ -463,14 +606,22 @@ class GraphStream:
         """Bring the engine's closure cache up to the current epoch — by
         touched-row refresh when the history since the last sync is
         additions-only, else by full rebuild."""
-        keys: Optional[np.ndarray] = None
+        delta = None
         if self._touched is not None:
-            keys = (
-                np.unique(np.concatenate(self._touched)).astype(np.uint32)
-                if self._touched
-                else np.zeros(0, np.uint32)
-            )
-        self.engine.refresh_closure(self._live(), keys, self._epoch)
+            if not self._touched:
+                delta = np.zeros(0, np.uint32)
+            elif getattr(self._touched[0], "ndim", 1) == 2:
+                # Fused sessions: OR the per-batch device bitmaps (cheap
+                # device ops), sync once for the refresh.
+                bitmap = self._touched[0]
+                for b in self._touched[1:]:
+                    bitmap = bitmap | b
+                delta = np.asarray(bitmap)
+            else:
+                delta = np.unique(np.concatenate(self._touched)).astype(
+                    np.uint32
+                )
+        self.engine.refresh_closure(self._live(), delta, self._epoch)
         self._touched = []
         self._touched_count = 0
 

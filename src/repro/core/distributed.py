@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.ingest import ingest
-from repro.core.sketch import GLavaSketch, scatter_flows
+from repro.core.sketch import GLavaSketch, scatter_flows, scatter_register
 from repro.distributed.compat import shard_map
 
 
@@ -40,6 +40,7 @@ def distributed_ingest(
     stream_axes: Sequence[str] = ("data",),
     model_axis: str = "model",
     backend: str = "onehot",
+    preagg_marginals=None,
 ) -> GLavaSketch:
     """Ingest a GLOBAL edge batch, sharded over `stream_axes`, into a sketch
     whose rows are sharded over `model_axis`.  Returns the updated sketch
@@ -48,7 +49,15 @@ def distributed_ingest(
     Per-device accumulation goes through the same :mod:`repro.core.ingest`
     dispatch as local ingest (``row_offset`` masks out-of-shard rows), so
     the distributed result is bit-identical to the local oracle for
-    integer weights — the engine's exact-equivalence contract."""
+    integer weights — the engine's exact-equivalence contract.
+
+    Pre-aggregation composes from the outside: a host-collapsed batch
+    (:func:`repro.core.ingest.preaggregate_host`) is just a smaller edge
+    batch, so callers (the GraphStream mesh branch) pass the collapsed
+    pairs here directly.  When they do, ``preagg_marginals`` =
+    ``(src_unique, src_totals, dst_unique, dst_totals)`` lets the
+    replicated flow registers update from the per-endpoint totals — one
+    register add per distinct endpoint instead of per pair."""
     if weights is None:
         weights = jnp.ones(src.shape, jnp.float32)
     weights = weights.astype(jnp.float32)
@@ -80,10 +89,20 @@ def distributed_ingest(
     )(sketch.counters, r, c, weights)
     # Flow registers are O(d·w) and replicated — maintain them with the
     # plain global scatter (same add order as local ingest, so the
-    # registers stay bit-identical to the local oracle's).
-    row_flows, col_flows = scatter_flows(
-        sketch.row_flows, sketch.col_flows, r, c, weights
-    )
+    # registers stay bit-identical to the local oracle's), or from the
+    # per-endpoint marginal totals when the batch was host-collapsed.
+    if preagg_marginals is not None:
+        src_unique, src_totals, dst_unique, dst_totals = preagg_marginals
+        row_flows = scatter_register(
+            sketch.row_flows, sketch.row_hash(src_unique), src_totals
+        )
+        col_flows = scatter_register(
+            sketch.col_flows, sketch.col_hash(dst_unique), dst_totals
+        )
+    else:
+        row_flows, col_flows = scatter_flows(
+            sketch.row_flows, sketch.col_flows, r, c, weights
+        )
     return dataclasses.replace(
         sketch, counters=counters, row_flows=row_flows, col_flows=col_flows
     )

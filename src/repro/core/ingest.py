@@ -107,11 +107,20 @@ def pad_to(x: jax.Array, multiple: int, axis: int, value=0) -> jax.Array:
 
 
 def _scatter(counters, local_r, cols, weights, in_shard, chunk):
-    d = counters.shape[0]
+    d, wr, wc = counters.shape
     d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], local_r.shape)
     w = jnp.where(in_shard, jnp.broadcast_to(weights[None, :], local_r.shape), 0.0)
     safe_r = jnp.where(in_shard, local_r, 0)
-    return counters.at[d_idx, safe_r, cols].add(w)
+    # Flat 1-D scatter with the bounds check promised away: safe_r/cols are
+    # in-range by construction (masking above; hash codomain), and the flat
+    # formulation measures ~40% faster than the 3-D scatter on XLA:CPU.
+    flat = ((d_idx * wr + safe_r) * wc + cols).reshape(-1)
+    return (
+        counters.reshape(-1)
+        .at[flat]
+        .add(w.reshape(-1), mode="promise_in_bounds")
+        .reshape(d, wr, wc)
+    )
 
 
 def _onehot(counters, local_r, cols, weights, in_shard, chunk):
@@ -120,7 +129,13 @@ def _onehot(counters, local_r, cols, weights, in_shard, chunk):
     chunk = min(chunk, batch)
     # Out-of-shard rows hit the sentinel one-hot class, sliced away below —
     # masking by INDEX, so weights stay untouched (exactness contract).
+    # Padded slots (batch rounded up to a whole number of chunks) use the
+    # same sentinel with weight zero, so ONE scan body covers every chunk
+    # and the remainder no longer costs a second trace.
     r_sent = jnp.where(in_shard, local_r, wr)
+    r_sent = pad_to(r_sent, chunk, 1, value=wr)
+    cols = pad_to(cols, chunk, 1)
+    weights = pad_to(weights, chunk, 0)
 
     def one_chunk(counters, args):
         rc, cc, wchunk = args  # (d, C), (d, C), (C,)
@@ -129,21 +144,11 @@ def _onehot(counters, local_r, cols, weights, in_shard, chunk):
         oh_c = oh_c * wchunk[None, :, None]
         return counters + jnp.einsum("dbr,dbc->drc", oh_r, oh_c), None
 
-    n_full = batch // chunk
-    if n_full:
-        rs = r_sent[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
-        cs = cols[:, : n_full * chunk].reshape(d, n_full, chunk).transpose(1, 0, 2)
-        ws = weights[: n_full * chunk].reshape(n_full, chunk)
-        counters, _ = jax.lax.scan(one_chunk, counters, (rs, cs, ws))
-    if batch - n_full * chunk:
-        counters, _ = one_chunk(
-            counters,
-            (
-                r_sent[:, n_full * chunk :],
-                cols[:, n_full * chunk :],
-                weights[n_full * chunk :],
-            ),
-        )
+    n = r_sent.shape[1] // chunk
+    rs = r_sent.reshape(d, n, chunk).transpose(1, 0, 2)
+    cs = cols.reshape(d, n, chunk).transpose(1, 0, 2)
+    ws = weights.reshape(n, chunk)
+    counters, _ = jax.lax.scan(one_chunk, counters, (rs, cs, ws))
     return counters
 
 
@@ -215,3 +220,169 @@ class IngestEngine:
             chunk=self.chunk,
             row_offset=row_offset,
         )
+
+
+# ---------------------------------------------------------------------------
+# in-batch pre-aggregation — the heavy-tail fast path (DESIGN.md Section 10)
+# ---------------------------------------------------------------------------
+#
+# Real graph streams are heavy-tailed: a zipf(1.5) batch of 32768 edges has
+# only ~20% unique (src, dst) pairs, so a plain scatter pays for every
+# duplicate.  Pre-aggregation collapses the batch to one slot per distinct
+# pair BEFORE any backend sees it.  Because the collapse is a plain sum of
+# signed weights it is EXACT for turnstile deletes and sliding-window slices
+# too, and in the integer-fp32 regime (per-pair |Σw| and every running
+# prefix < 2**24) it is bit-identical to ingesting the raw batch.
+#
+# Two implementations with one semantics:
+#   * ``preaggregate_edges`` — traced, static-shape (sort + segment sums via
+#     cumsum prefix differences; no ``jnp.unique``).  Rides INSIDE any jit,
+#     so device-resident pipelines (TPU) collapse without a host round-trip.
+#   * ``preaggregate_host`` — numpy (argsort + ``np.add.reduceat``).  The
+#     session boundary (``api/stream.py``) is already host-side for label
+#     encoding, and one host argsort is ~3x cheaper than the XLA:CPU sort,
+#     so GraphStream uses this variant and additionally gets the per-src /
+#     per-dst marginal totals that let the flow registers collapse further.
+
+PREAGG_MIN_BATCH = 1024  # below this the sort costs more than it saves
+PREAGG_SHRINK = 4        # in-jit collapsed slots = batch // PREAGG_SHRINK
+PREAGG_MIN_OUT = 256     # floor on the collapsed slot count
+
+
+def resolve_preagg(mode: Optional[str] = None, batch: Optional[int] = None) -> bool:
+    """Resolve a pre-aggregation mode ("auto"/"on"/"off"/None) to a bool.
+
+    "auto" (and None) honours the ``REPRO_INGEST_PREAGG`` environment
+    variable if set, else enables pre-aggregation for batches of at least
+    ``PREAGG_MIN_BATCH`` edges.  "on" forces it regardless of batch size
+    (tests exercise small batches this way); "off" disables it."""
+    if mode in (None, "auto"):
+        env = os.environ.get("REPRO_INGEST_PREAGG", "").strip().lower()
+        mode = env or "auto"
+    if mode == "auto":
+        return batch is None or batch >= PREAGG_MIN_BATCH
+    if mode in ("on", "1", "true"):
+        return True
+    if mode in ("off", "0", "false"):
+        return False
+    raise ValueError(f"unknown preagg mode: {mode!r} (want auto/on/off)")
+
+
+def preaggregate_edges(src, dst, weights, out_size: int):
+    """Collapse duplicate (src, dst) pairs inside a jit — static shapes only.
+
+    Sorts the batch by a 32-bit mixed pair key, finds run boundaries by
+    neighbour compare on the sorted (src, dst) themselves (so key collisions
+    merely split a run — never merge distinct pairs), and segment-sums the
+    weights by cumulative-sum prefix differences (O(B) gathers; NOT
+    ``jax.ops.segment_sum``, whose scatter would cost as much as the ingest
+    it is meant to save).
+
+    Returns ``(s_rep, d_rep, w_agg, n_seg)`` with static shape
+    ``(out_size,)`` each: representative keys and summed weights for the
+    first ``min(n_seg, out_size)`` segments.  Slots past ``n_seg`` carry
+    weight exactly 0.0 with a (duplicated) real key, so scattering them is a
+    no-op in the counting regime.  When ``n_seg > out_size`` the collapse
+    does not fit — callers branch to the raw batch (``lax.cond``)."""
+    from repro.core.hashing import mix_keys
+
+    b = src.shape[0]
+    key = mix_keys(src, dst)
+    _, order = jax.lax.sort_key_val(key, jnp.arange(b, dtype=jnp.int32))
+    s2, d2, w2 = src[order], dst[order], weights[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (s2[1:] != s2[:-1]) | (d2[1:] != d2[:-1])]
+    )
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1  # (B,) non-decreasing
+    n_seg = seg[-1] + 1
+    csum = jnp.concatenate([jnp.zeros((1,), w2.dtype), jnp.cumsum(w2)])
+    starts = jnp.searchsorted(
+        seg, jnp.arange(out_size, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), b, jnp.int32)])
+    w_agg = csum[ends] - csum[starts]
+    reps = jnp.clip(starts, 0, b - 1)
+    return s2[reps], d2[reps], w_agg, n_seg
+
+
+@dataclasses.dataclass(frozen=True)
+class PreaggBatch:
+    """A host-collapsed edge batch: distinct pairs plus marginal totals.
+
+    ``src/dst/weights`` hold one slot per distinct (src, dst) pair of the
+    raw batch with exactly-summed signed weights.  ``src_unique/src_totals``
+    and ``dst_unique/dst_totals`` are the per-endpoint marginals — the flow
+    registers only need those, which is a second collapse on top of the
+    pair collapse (one row-register add per distinct src, not per pair)."""
+
+    src: np.ndarray          # (P,) uint32 — distinct pair sources
+    dst: np.ndarray          # (P,) uint32 — distinct pair destinations
+    weights: np.ndarray      # (P,) float32 — per-pair summed weight
+    src_unique: np.ndarray   # (S,) uint32
+    src_totals: np.ndarray   # (S,) float32
+    dst_unique: np.ndarray   # (D,) uint32
+    dst_totals: np.ndarray   # (D,) float32
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.src.size)
+
+
+def preaggregate_host(src, dst, weights) -> PreaggBatch:
+    """Numpy twin of :func:`preaggregate_edges` for the session boundary.
+
+    One stable argsort of the 64-bit pair key gives the pair collapse via
+    ``np.add.reduceat``; the per-src marginals fall out of the same order
+    (sources are contiguous in pair order), and a second small argsort of
+    the collapsed pairs gives the per-dst marginals.  Exact for signed
+    weights; bit-identical to the raw batch in the integer regime."""
+    sn = np.atleast_1d(np.asarray(src, np.uint32))
+    dn = np.atleast_1d(np.asarray(dst, np.uint32))
+    wn = np.atleast_1d(np.asarray(weights, np.float32))
+    if sn.size == 0:
+        empty_u, empty_f = sn[:0], wn[:0]
+        return PreaggBatch(sn, dn, wn, empty_u, empty_f, empty_u, empty_f)
+    pair = (sn.astype(np.uint64) << np.uint64(32)) | dn.astype(np.uint64)
+    order = np.argsort(pair, kind="stable")
+    ps, ss, ds, ws = pair[order], sn[order], dn[order], wn[order]
+    first = np.empty(ps.size, bool)
+    first[0] = True
+    first[1:] = ps[1:] != ps[:-1]
+    starts = np.flatnonzero(first)
+    s_rep, d_rep = ss[starts], ds[starts]
+    w_agg = np.add.reduceat(ws, starts).astype(np.float32)
+    sfirst = np.empty(starts.size, bool)
+    sfirst[0] = True
+    sfirst[1:] = s_rep[1:] != s_rep[:-1]
+    sstarts = np.flatnonzero(sfirst)
+    src_unique = s_rep[sstarts]
+    src_totals = np.add.reduceat(w_agg, sstarts).astype(np.float32)
+    dorder = np.argsort(d_rep, kind="stable")
+    dr, dw = d_rep[dorder], w_agg[dorder]
+    dfirst = np.empty(dr.size, bool)
+    dfirst[0] = True
+    dfirst[1:] = dr[1:] != dr[:-1]
+    dstarts = np.flatnonzero(dfirst)
+    dst_unique = dr[dstarts]
+    dst_totals = np.add.reduceat(dw, dstarts).astype(np.float32)
+    return PreaggBatch(
+        s_rep, d_rep, w_agg, src_unique, src_totals, dst_unique, dst_totals
+    )
+
+
+def bucket_size(n: int, minimum: int = 256) -> int:
+    """Next power-of-two at or above ``n`` (floored at ``minimum``) — the
+    padded-shape ladder that bounds how many traces variable-size collapsed
+    batches can cost at a jit boundary."""
+    size = minimum
+    while size < n:
+        size *= 2
+    return size
+
+
+def pad_bucket(x: np.ndarray, minimum: int = 256, value=0) -> np.ndarray:
+    """Right-pad a 1-D host array to its :func:`bucket_size` with ``value``."""
+    pad = bucket_size(x.size, minimum) - x.size
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full(pad, value, x.dtype)])

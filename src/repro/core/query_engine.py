@@ -294,7 +294,9 @@ class QueryEngine:
         node keys whose rows the mutations since the cached epoch touched
         (``reach.closure_refresh`` — exact for additions-only histories).
 
-        ``touched_keys`` is a unique (U,) uint32 key array, or ``None``
+        ``touched_keys`` is a unique (U,) uint32 key array, OR a (d, w_r)
+        bool BITMAP of touched row buckets (the fused ingest kernel's
+        device-emitted form — ``GLavaSketch.update_fused``), or ``None``
         meaning "unknown / not additions-only" (deletes, window expiry,
         merges) which — like a missing or foreign cached closure — falls
         back to a full :meth:`closure_for` build.  So does a refresh past
@@ -312,25 +314,45 @@ class QueryEngine:
             and self._closure_family == self._family_key(sketch)
             and self._incremental_since_full < self.closure_staleness_budget
         )
+        rows = None
+        w_r = sketch.counters.shape[1]
         if can_incremental:
             touched_keys = np.atleast_1d(np.asarray(touched_keys))
-            w_r = sketch.counters.shape[1]
-            if touched_keys.size > self.closure_refresh_frac * w_r:
-                can_incremental = False
+            if touched_keys.ndim == 2:
+                # Touched-row bitmap: per-depth row indices, right-padded
+                # with row 0 to a shared T (idempotent under the union).
+                bitmap = touched_keys.astype(bool)
+                counts = bitmap.sum(axis=1)
+                t_max = int(counts.max()) if counts.size else 0
+                if t_max > self.closure_refresh_frac * w_r:
+                    can_incremental = False
+                elif t_max > 0:
+                    t_pad = t_max + (-t_max) % CLOSURE_REFRESH_PAD_T
+                    rows_np = np.zeros((bitmap.shape[0], t_pad), np.int32)
+                    for i in range(bitmap.shape[0]):
+                        idx = np.flatnonzero(bitmap[i])
+                        rows_np[i, : idx.size] = idx
+                    rows = jnp.asarray(rows_np)
+                touched_size = t_max
+            else:
+                if touched_keys.size > self.closure_refresh_frac * w_r:
+                    can_incremental = False
+                touched_size = touched_keys.size
         if not can_incremental:
             return self.closure_for(sketch, epoch)
-        if touched_keys.size == 0:
+        if touched_size == 0:
             # Nothing touched: the counters are unchanged, only retag.
             self._closure_epoch = epoch
             return self._closure
-        rows = sketch.row_hash(
-            jnp.asarray(touched_keys.astype(np.uint32, copy=False))
-        )  # (d, U)
-        pad = (-rows.shape[1]) % CLOSURE_REFRESH_PAD_T
-        if pad:
-            # Padding with row 0 is exact: an untouched row only restates
-            # paths the cached closure already contains.
-            rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        if rows is None:
+            rows = sketch.row_hash(
+                jnp.asarray(touched_keys.astype(np.uint32, copy=False))
+            )  # (d, U)
+            pad = (-rows.shape[1]) % CLOSURE_REFRESH_PAD_T
+            if pad:
+                # Padding with row 0 is exact: an untouched row only restates
+                # paths the cached closure already contains.
+                rows = jnp.pad(rows, ((0, 0), (0, pad)))
         self._closure = self._fn("closure_refresh")(
             self._closure, sketch.counters, rows
         )

@@ -31,7 +31,15 @@ from repro.core.hashing import (
     make_hash_family,
     mix_keys,
 )
-from repro.core.ingest import DEFAULT_CHUNK, IngestEngine, ingest
+from repro.core.ingest import (
+    DEFAULT_CHUNK,
+    PREAGG_MIN_OUT,
+    PREAGG_SHRINK,
+    IngestEngine,
+    ingest,
+    preaggregate_edges,
+    resolve_preagg,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,11 +95,25 @@ def scatter_flows(
     ``jnp.sum(counters, axis=2)`` / ``axis=1`` of the correspondingly
     updated counters (fp32 integer addition is order-independent in the
     exact range — the IngestEngine equivalence contract)."""
-    d_idx = jnp.broadcast_to(jnp.arange(rows.shape[0])[:, None], rows.shape)
-    w = jnp.broadcast_to(weights[None, :], rows.shape).astype(row_flows.dtype)
     return (
-        row_flows.at[d_idx, rows].add(w),
-        col_flows.at[d_idx, cols].add(w),
+        scatter_register(row_flows, rows, weights),
+        scatter_register(col_flows, cols, weights),
+    )
+
+
+def scatter_register(register: jax.Array, buckets: jax.Array, weights: jax.Array):
+    """Scatter-add ``weights`` into one (d, w) flow register at per-depth
+    ``buckets`` (d, B).  Flat 1-D formulation with the bounds check promised
+    away — buckets come from the hash family, in-range by construction."""
+    d, w = register.shape
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], buckets.shape)
+    vals = jnp.broadcast_to(weights[None, :], buckets.shape).astype(register.dtype)
+    flat = (d_idx * w + buckets).reshape(-1)
+    return (
+        register.reshape(-1)
+        .at[flat]
+        .add(vals.reshape(-1), mode="promise_in_bounds")
+        .reshape(d, w)
     )
 
 
@@ -158,23 +180,9 @@ class GLavaSketch:
         """(B,) uint32 keys -> ((d,B) row buckets, (d,B) col buckets)."""
         return self.row_hash(src), self.col_hash(dst)
 
-    def update(
-        self,
-        src: jax.Array,
-        dst: jax.Array,
-        weights: Optional[jax.Array] = None,
-        backend: str = "auto",
-        chunk: int = DEFAULT_CHUNK,
-    ) -> "GLavaSketch":
-        """Ingest a batch of stream elements (x, y; w).
-
-        ``backend`` resolves through the :class:`IngestEngine` convention:
-        "auto" honours ``REPRO_INGEST_BACKEND``, else pallas on TPU and
-        scatter elsewhere."""
-        if weights is None:
-            weights = jnp.ones(src.shape, jnp.float32)
-        weights = weights.astype(jnp.float32)
-        engine = IngestEngine(backend, chunk)
+    def _apply_batch(self, engine: IngestEngine, src, dst, weights):
+        """Counters + flow registers for one (possibly collapsed) batch,
+        including the undirected mirror — returns the three arrays."""
         r, c = self.hash_edges(src, dst)
         counters = engine(self.counters, r, c, weights)
         row_flows, col_flows = scatter_flows(
@@ -188,9 +196,143 @@ class GLavaSketch:
             row_flows, col_flows = scatter_flows(
                 row_flows, col_flows, r2, c2, weights
             )
+        return counters, row_flows, col_flows
+
+    def update(
+        self,
+        src: jax.Array,
+        dst: jax.Array,
+        weights: Optional[jax.Array] = None,
+        backend: str = "auto",
+        chunk: int = DEFAULT_CHUNK,
+        preagg: str = "auto",
+    ) -> "GLavaSketch":
+        """Ingest a batch of stream elements (x, y; w).
+
+        ``backend`` resolves through the :class:`IngestEngine` convention:
+        "auto" honours ``REPRO_INGEST_BACKEND``, else pallas on TPU and
+        scatter elsewhere.
+
+        ``preagg`` resolves through :func:`repro.core.ingest.resolve_preagg`
+        ("auto" honours ``REPRO_INGEST_PREAGG``, else batches of at least
+        ``PREAGG_MIN_BATCH``): when on, duplicate (src, dst) pairs are
+        collapsed in-jit (:func:`preaggregate_edges`) and the scatter runs
+        on ``batch // PREAGG_SHRINK`` slots; a ``lax.cond`` falls back to
+        the raw batch when the collapse does not fit (low-duplication
+        traffic).  Exact for signed weights — turnstile deletes included."""
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        engine = IngestEngine(backend, chunk)
+        b = int(src.shape[0])
+        out_size = max(PREAGG_MIN_OUT, b // PREAGG_SHRINK)
+        if resolve_preagg(preagg, batch=b) and out_size < b:
+            s_rep, d_rep, w_agg, n_seg = preaggregate_edges(
+                src, dst, weights, out_size
+            )
+            counters, row_flows, col_flows = jax.lax.cond(
+                n_seg <= out_size,
+                lambda: self._apply_batch(engine, s_rep, d_rep, w_agg),
+                lambda: self._apply_batch(engine, src, dst, weights),
+            )
+        else:
+            counters, row_flows, col_flows = self._apply_batch(
+                engine, src, dst, weights
+            )
         return dataclasses.replace(
             self, counters=counters, row_flows=row_flows, col_flows=col_flows
         )
+
+    def update_preaggregated(
+        self,
+        src: jax.Array,          # (P,) distinct-pair sources
+        dst: jax.Array,          # (P,) distinct-pair destinations
+        weights: jax.Array,      # (P,) per-pair summed weights
+        src_unique: jax.Array,   # (S,) distinct sources
+        src_totals: jax.Array,   # (S,) per-source summed weights
+        dst_unique: jax.Array,   # (D,) distinct destinations
+        dst_totals: jax.Array,   # (D,) per-destination summed weights
+        backend: str = "auto",
+        chunk: int = DEFAULT_CHUNK,
+    ) -> "GLavaSketch":
+        """Ingest a HOST-COLLAPSED batch (:func:`preaggregate_host`).
+
+        Counters take one scatter slot per distinct pair through the normal
+        :class:`IngestEngine` dispatch (any backend); the flow registers
+        take one slot per distinct ENDPOINT — the marginal totals — which
+        is the second collapse the session fast path rides.  Zero-weight
+        padding slots are no-ops in the counting regime (counters never
+        hold -0.0), so callers may pad all seven arrays freely."""
+        weights = weights.astype(jnp.float32)
+        engine = IngestEngine(backend, chunk)
+        r, c = self.hash_edges(src, dst)
+        counters = engine(self.counters, r, c, weights)
+        row_flows = scatter_register(
+            self.row_flows, self.row_hash(src_unique), src_totals
+        )
+        col_flows = scatter_register(
+            self.col_flows, self.col_hash(dst_unique), dst_totals
+        )
+        if not self.config.directed:
+            r2, c2 = self.hash_edges(dst, src)
+            counters = engine(counters, r2, c2, weights)
+            row_flows = scatter_register(
+                row_flows, self.row_hash(dst_unique), dst_totals
+            )
+            col_flows = scatter_register(
+                col_flows, self.col_hash(src_unique), src_totals
+            )
+        return dataclasses.replace(
+            self, counters=counters, row_flows=row_flows, col_flows=col_flows
+        )
+
+    def update_fused(
+        self,
+        src: jax.Array,
+        dst: jax.Array,
+        weights: Optional[jax.Array] = None,
+        interpret: Optional[bool] = None,
+    ):
+        """One-pass fused ingest: counters, both flow registers, AND the
+        touched-row bitmap in a single sweep over the batch
+        (``repro.kernels.ingest_fused`` — the Pallas kernel on TPU, its
+        bit-identical jnp ref twin elsewhere).
+
+        Returns ``(new_sketch, touched)`` where ``touched`` is a (d, w_r)
+        bool bitmap of row buckets this batch wrote — the device-resident
+        replacement for the host-side ``touched_row_keys`` pass, consumed
+        by ``QueryEngine.refresh_closure``."""
+        from repro.kernels.ingest_fused.ops import fused_ingest
+
+        if weights is None:
+            weights = jnp.ones(src.shape, jnp.float32)
+        weights = weights.astype(jnp.float32)
+        r, c = self.hash_edges(src, dst)
+        counters, row_flows, col_flows, touched = fused_ingest(
+            self.counters,
+            self.row_flows,
+            self.col_flows,
+            r.astype(jnp.int32),
+            c.astype(jnp.int32),
+            weights,
+            interpret=interpret,
+        )
+        if not self.config.directed:
+            r2, c2 = self.hash_edges(dst, src)
+            counters, row_flows, col_flows, touched2 = fused_ingest(
+                counters,
+                row_flows,
+                col_flows,
+                r2.astype(jnp.int32),
+                c2.astype(jnp.int32),
+                weights,
+                interpret=interpret,
+            )
+            touched = touched | touched2
+        new = dataclasses.replace(
+            self, counters=counters, row_flows=row_flows, col_flows=col_flows
+        )
+        return new, touched
 
     def delete(
         self,

@@ -56,21 +56,37 @@ class SlidingWindowSketch:
     def n_slices(self) -> int:
         return self.slices.shape[0]
 
-    def update(self, src, dst, weights=None, backend: str = "auto"):
-        """Ingest into the active slice (counters AND its registers)."""
-        active = dataclasses.replace(
+    def _active(self) -> GLavaSketch:
+        return dataclasses.replace(
             self.template,
             counters=self.slices[self.current],
             row_flows=self.row_flows[self.current],
             col_flows=self.col_flows[self.current],
         )
-        active = active.update(src, dst, weights, backend=backend)
+
+    def _store(self, active: GLavaSketch) -> "SlidingWindowSketch":
         return dataclasses.replace(
             self,
             slices=self.slices.at[self.current].set(active.counters),
             row_flows=self.row_flows.at[self.current].set(active.row_flows),
             col_flows=self.col_flows.at[self.current].set(active.col_flows),
         )
+
+    def update(self, src, dst, weights=None, backend: str = "auto",
+               preagg: str = "auto"):
+        """Ingest into the active slice (counters AND its registers).
+        Pre-aggregation applies per-slice exactly like local ingest — the
+        collapse is a signed-weight sum, so slice boundaries and later
+        whole-slice expiry are unaffected."""
+        active = self._active().update(
+            src, dst, weights, backend=backend, preagg=preagg
+        )
+        return self._store(active)
+
+    def update_preaggregated(self, *args, **kwargs) -> "SlidingWindowSketch":
+        """Host-collapsed ingest into the active slice — the session fast
+        path (see :meth:`GLavaSketch.update_preaggregated`)."""
+        return self._store(self._active().update_preaggregated(*args, **kwargs))
 
     def advance(self) -> "SlidingWindowSketch":
         """Move to the next time slice, expiring the oldest (zeroing the slot

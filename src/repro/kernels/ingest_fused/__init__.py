@@ -1,0 +1,2 @@
+"""One-pass fused ingest: counters + flow registers + touched-row bitmap
+in a single sweep over the edge batch (DESIGN.md Section 10)."""

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: ONE-PASS fused sketch ingest.
+
+Plain ingest makes three separate passes over HBM per batch: the counter
+scatter, ``scatter_flows`` for the two flow registers, and (host-side)
+``touched_row_keys`` for the incremental-closure plane.  This kernel does
+all four updates in a single sweep:
+
+    counters[i, r, c] += w        row_flows[i, r] += w
+    col_flows[i, c]   += w        touched[i, r]    = 1
+
+Grid = (d, wr/TILE_R, B/CHUNK_B) with the edge-chunk axis innermost, so the
+(TILE_R x wc) counter stripe, its row-flow/touched slices, and the full
+col-flow row stay VMEM-resident while every chunk accumulates into them
+(input_output_aliasing keeps the updates in place).  Column tiles are the
+FULL padded width: col_flows has no row-tile axis, so it accumulates only
+on the j == 0 row tile, and splitting columns would either double-count it
+or force a second pass — the thing this kernel exists to avoid.
+
+VMEM working set per program (wc = 1024):
+    TILE_R*wc*4 (counter stripe) + CHUNK_B*wc*4 (one-hot cols)
+    + CHUNK_B*TILE_R*4 (one-hot rows) + O(CHUNK_B + TILE_R + wc)
+    = 1 MB + 2 MB + 0.5 MB ≈ 3.5 MB  « 16 MB VMEM.
+MXU alignment: TILE_R and the padded wc are multiples of 128; CHUNK_B of 8.
+
+Row ids may be -1 (padding / out-of-shard): the iota compare matches no
+row AND the weight is masked to zero, so such slots touch nothing — not
+even col_flows.  The ``touched`` output marks every row a VALID slot hashes
+to, weight 0 included (ref.py mirrors both rules bit-for-bit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+CHUNK_B = 512
+LANE = 128  # the padded column width must be a multiple of this
+
+
+def _fused_kernel(
+    rows_ref,
+    cols_ref,
+    w_ref,
+    counters_ref,
+    rf_ref,
+    cf_ref,
+    out_c_ref,
+    out_rf_ref,
+    out_cf_ref,
+    out_t_ref,
+    *,
+    wc: int,
+):
+    """One (d, r-tile, b-chunk) program over the full column width."""
+    i_j = pl.program_id(1)
+    i_b = pl.program_id(2)
+
+    @pl.when(i_b == 0)
+    def _init():
+        out_c_ref[...] = counters_ref[...]
+        out_rf_ref[...] = rf_ref[...]
+        out_t_ref[...] = jnp.zeros_like(out_t_ref)
+
+    @pl.when((i_b == 0) & (i_j == 0))
+    def _init_cf():
+        out_cf_ref[...] = cf_ref[...]
+
+    rows = rows_ref[0, :]                       # (CB,) int32, global row ids
+    cols = cols_ref[0, :]
+    w = w_ref[...]                              # (CB,) f32
+    # -1 rows (padding / out-of-shard) contribute nothing anywhere: the iota
+    # compare already misses every row; masking w kills col_flows too.
+    w = w * (rows >= 0).astype(jnp.float32)
+    r_local = rows - i_j * TILE_R
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (CHUNK_B, TILE_R), 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (CHUNK_B, wc), 1)
+    oh_r = (iota_r == r_local[:, None]).astype(jnp.float32)       # (CB, TR)
+    oh_c = (iota_c == cols[:, None]).astype(jnp.float32)          # (CB, wc)
+    oh_cw = oh_c * w[:, None]
+    upd = jax.lax.dot_general(
+        oh_r, oh_cw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TR, wc)
+    out_c_ref[...] += upd[None]
+    out_rf_ref[...] += jnp.sum(oh_r * w[:, None], axis=0)[None]
+    # touched = "a valid slot hashed here", weight-independent (oh_r is
+    # built from indices alone, so w == 0 edges still mark their row).
+    out_t_ref[...] = jnp.maximum(out_t_ref[...], jnp.max(oh_r, axis=0)[None])
+
+    @pl.when(i_j == 0)
+    def _col_flows():
+        out_cf_ref[...] += jnp.sum(oh_cw, axis=0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_ingest_pallas(
+    counters, row_flows, col_flows, rows, cols, weights, interpret: bool = True
+):
+    """counters (d, wr, wc) f32; row/col_flows (d, wr)/(d, wc) f32;
+    rows/cols (d, B) int32; weights (B,) f32.  Shapes must be pre-padded:
+    wr % TILE_R == wc % LANE == B % CHUNK_B == 0 (ops.py handles padding).
+    Returns (counters, row_flows, col_flows, touched) with touched (d, wr)
+    f32 in {0, 1}."""
+    d, wr, wc = counters.shape
+    b = rows.shape[1]
+    grid = (d, wr // TILE_R, b // CHUNK_B)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, wc=wc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CHUNK_B), lambda i, j, l: (i, l)),      # rows
+            pl.BlockSpec((1, CHUNK_B), lambda i, j, l: (i, l)),      # cols
+            pl.BlockSpec((CHUNK_B,), lambda i, j, l: (l,)),          # weights
+            pl.BlockSpec((1, TILE_R, wc), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((1, TILE_R), lambda i, j, l: (i, j)),       # row_flows
+            pl.BlockSpec((1, wc), lambda i, j, l: (i, 0)),           # col_flows
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_R, wc), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((1, TILE_R), lambda i, j, l: (i, j)),
+            pl.BlockSpec((1, wc), lambda i, j, l: (i, 0)),
+            pl.BlockSpec((1, TILE_R), lambda i, j, l: (i, j)),       # touched
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, wr, wc), jnp.float32),
+            jax.ShapeDtypeStruct((d, wr), jnp.float32),
+            jax.ShapeDtypeStruct((d, wc), jnp.float32),
+            jax.ShapeDtypeStruct((d, wr), jnp.float32),
+        ],
+        input_output_aliases={3: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(rows, cols, weights, counters, row_flows, col_flows)

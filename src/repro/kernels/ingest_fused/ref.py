@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused ingest kernel — the exact composition the
+kernel replaces: the counter scatter, ``scatter_flows`` on both registers,
+and the touched-row bitmap (the device-resident ``touched_row_keys``).
+
+Semantics shared bit-for-bit with kernel.py:
+  * rows == -1 (padding / out-of-shard) contribute NOTHING — not to the
+    counters, not to either flow register;
+  * ``touched[i, r]`` is True iff some valid slot hashes to row r, even
+    with weight 0 (touched is a superset contract — refresh_closure only
+    needs every changed row covered, extras are idempotent).
+"""
+import jax.numpy as jnp
+
+
+def fused_ingest_ref(counters, row_flows, col_flows, rows, cols, weights):
+    """counters (d, wr, wc) f32; row/col_flows (d, wr)/(d, wc) f32;
+    rows/cols (d, B) int32 (rows may be -1); weights (B,) f32.
+    Returns (counters, row_flows, col_flows, touched) with touched
+    (d, wr) bool."""
+    d, wr, _ = counters.shape
+    d_idx = jnp.broadcast_to(jnp.arange(d)[:, None], rows.shape)
+    valid = rows >= 0
+    safe_r = jnp.where(valid, rows, 0)
+    w = jnp.broadcast_to(weights[None, :].astype(jnp.float32), rows.shape)
+    w = w * valid
+    counters = counters.at[d_idx, safe_r, cols].add(w)
+    row_flows = row_flows.at[d_idx, safe_r].add(w)
+    col_flows = col_flows.at[d_idx, cols].add(w)
+    touched = jnp.zeros((d, wr), bool).at[d_idx, safe_r].max(valid)
+    return counters, row_flows, col_flows, touched

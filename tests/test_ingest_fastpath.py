@@ -1,0 +1,394 @@
+"""Heavy-tail ingest fast path property tests.
+
+The exactness story: in-batch pre-aggregation collapses duplicate (src, dst)
+pairs by SUMMING their signed fp32 weights before the sketch add.  Because
+integer-valued fp32 addition below 2**24 is associative, the collapsed batch
+lands bit-identically to the per-edge sequential oracle — on counters AND
+both flow-register planes, for additions and turnstile deletes alike.  These
+tests pin that contract for every layer: the in-jit collapse, the host-side
+collapse + marginal registers, the fused one-pass kernel's ref twin, the
+GraphStream session boundary, the sliding window, and the touched-row bitmap
+handoff into the incremental closure refresh.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.stream import GraphStream
+from repro.core import GLavaSketch, QueryEngine, SketchConfig
+from repro.core.ingest import (
+    PREAGG_MIN_BATCH,
+    bucket_size,
+    ingest,
+    pad_bucket,
+    preaggregate_edges,
+    preaggregate_host,
+    resolve_preagg,
+    touched_row_keys,
+)
+from repro.core.sketch import scatter_flows
+from repro.core.window import SlidingWindowSketch
+from repro.kernels.ingest_fused.ref import fused_ingest_ref
+
+RNG = np.random.default_rng(11)
+
+
+def _sketch(depth=3, wr=128, wc=128, seed=0, directed=True):
+    cfg = SketchConfig(
+        depth=depth, width_rows=wr, width_cols=wc, directed=directed
+    )
+    return GLavaSketch.empty(cfg, jax.random.key(seed))
+
+
+def _dup_heavy(n, n_keys=40, signed=False, seed=1):
+    """A duplicate-heavy batch: few distinct endpoints, integer weights."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_keys, n).astype(np.uint32)
+    dst = rng.integers(0, n_keys, n).astype(np.uint32)
+    lo = -8 if signed else 1
+    w = rng.integers(lo, 9, n)
+    if signed:
+        w[w == 0] = 1
+    return src, dst, w.astype(np.float32)
+
+
+def _assert_sketch_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(b.counters))
+    np.testing.assert_array_equal(
+        np.asarray(a.row_flows), np.asarray(b.row_flows)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.col_flows), np.asarray(b.col_flows)
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-jit pre-aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("directed", [True, False])
+def test_preagg_bit_identical_duplicate_heavy(directed):
+    sk = _sketch(directed=directed)
+    src, dst, w = _dup_heavy(3000)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    on = sk.update(s, d, ww, backend="scatter", preagg="on")
+    off = sk.update(s, d, ww, backend="scatter", preagg="off")
+    seq = sk.update_sequential(s, d, ww)
+    _assert_sketch_equal(on, off)
+    np.testing.assert_array_equal(
+        np.asarray(on.counters), np.asarray(seq.counters)
+    )
+
+
+def test_preagg_mixed_sign_weights_turnstile():
+    """Signed collapse is exact: deletes sum against inserts before the add,
+    and the result still lands bit-identically (fp32 ints < 2**24)."""
+    sk = _sketch()
+    src, dst, w = _dup_heavy(3000, signed=True)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    on = sk.update(s, d, ww, backend="scatter", preagg="on")
+    off = sk.update(s, d, ww, backend="scatter", preagg="off")
+    _assert_sketch_equal(on, off)
+
+
+def test_preagg_empty_after_collapse():
+    """Every pair's weights cancel exactly — the collapsed batch is all
+    zeros and the sketch must come back bit-identical to the original."""
+    sk = _sketch()
+    src = np.repeat(np.arange(20, dtype=np.uint32), 2)
+    dst = np.repeat(np.arange(100, 120, dtype=np.uint32), 2)
+    w = np.tile(np.asarray([5.0, -5.0], np.float32), 20)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    on = sk.update(s, d, ww, backend="scatter", preagg="on")
+    off = sk.update(s, d, ww, backend="scatter", preagg="off")
+    _assert_sketch_equal(on, off)
+    np.testing.assert_array_equal(
+        np.asarray(on.counters), np.asarray(sk.counters)
+    )
+
+
+def test_preagg_fallback_when_low_duplication():
+    """All-unique pairs overflow the collapsed buffer (n_seg > out_size), so
+    the in-jit cond must fall back to the raw batch — still bit-identical."""
+    sk = _sketch()
+    n = 2048  # out_size = max(256, n // 4) = 512 < n unique pairs
+    src = np.arange(n, dtype=np.uint32)
+    dst = np.arange(n, 2 * n, dtype=np.uint32)
+    w = np.ones(n, np.float32)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    on = sk.update(s, d, ww, backend="scatter", preagg="on")
+    off = sk.update(s, d, ww, backend="scatter", preagg="off")
+    _assert_sketch_equal(on, off)
+
+
+def test_preaggregate_edges_collapses_exactly():
+    src, dst, w = _dup_heavy(1024, n_keys=12, signed=True)
+    s_rep, d_rep, w_agg, n_seg = jax.jit(
+        lambda s, d, ww: preaggregate_edges(s, d, ww, out_size=256)
+    )(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+    n = int(n_seg)
+    got = {}
+    for s_, d_, w_ in zip(
+        np.asarray(s_rep)[:n], np.asarray(d_rep)[:n], np.asarray(w_agg)[:n]
+    ):
+        key = (int(s_), int(d_))
+        assert key not in got, "duplicate pair survived the collapse"
+        got[key] = float(w_)
+    want = {}
+    for s_, d_, w_ in zip(src, dst, w):
+        want[(int(s_), int(d_))] = want.get((int(s_), int(d_)), 0.0) + float(w_)
+    assert got == want
+    # padding slots beyond n_seg carry zero weight (inert on add)
+    assert not np.asarray(w_agg)[n:].any()
+
+
+def test_resolve_preagg_gating():
+    assert resolve_preagg("on", batch=8)
+    assert not resolve_preagg("off", batch=10**6)
+    assert not resolve_preagg("auto", batch=PREAGG_MIN_BATCH - 1)
+    assert resolve_preagg("auto", batch=PREAGG_MIN_BATCH)
+
+
+# ---------------------------------------------------------------------------
+# host-side collapse + marginal registers (the session fast path's core)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("directed", [True, False])
+def test_host_preagg_update_matches_plain(directed):
+    sk = _sketch(directed=directed)
+    src, dst, w = _dup_heavy(4000, signed=True, seed=3)
+    pre = preaggregate_host(src, dst, w)
+    assert pre.n_pairs < len(src)
+    got = sk.update_preaggregated(
+        jnp.asarray(pre.src),
+        jnp.asarray(pre.dst),
+        jnp.asarray(pre.weights),
+        jnp.asarray(pre.src_unique),
+        jnp.asarray(pre.src_totals),
+        jnp.asarray(pre.dst_unique),
+        jnp.asarray(pre.dst_totals),
+    )
+    want = sk.update(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+        backend="scatter", preagg="off",
+    )
+    _assert_sketch_equal(got, want)
+
+
+def test_host_preagg_marginals_match_numpy_oracle():
+    src, dst, w = _dup_heavy(2000, n_keys=25, signed=True, seed=5)
+    pre = preaggregate_host(src, dst, w)
+    for uniq, tot, keys in (
+        (pre.src_unique, pre.src_totals, src),
+        (pre.dst_unique, pre.dst_totals, dst),
+    ):
+        want_keys, inv = np.unique(keys, return_inverse=True)
+        want_tot = np.zeros(len(want_keys), np.float32)
+        np.add.at(want_tot, inv, w)
+        order = np.argsort(np.asarray(uniq), kind="stable")
+        np.testing.assert_array_equal(np.asarray(uniq)[order], want_keys)
+        np.testing.assert_array_equal(np.asarray(tot)[order], want_tot)
+
+
+def test_host_preagg_empty_batch():
+    pre = preaggregate_host(
+        np.empty(0, np.uint32), np.empty(0, np.uint32), np.empty(0, np.float32)
+    )
+    assert pre.n_pairs == 0 and pre.src_unique.size == 0
+
+
+def test_bucket_padding_helpers():
+    assert bucket_size(1) == 256 and bucket_size(256) == 256
+    assert bucket_size(257) == 512 and bucket_size(5000) == 8192
+    x = np.arange(5, dtype=np.float32)
+    padded = pad_bucket(x, minimum=8, value=0)
+    assert padded.shape == (8,) and not padded[5:].any()
+    np.testing.assert_array_equal(padded[:5], x)
+
+
+# ---------------------------------------------------------------------------
+# conservative update: pre-aggregation must NOT apply
+# ---------------------------------------------------------------------------
+
+
+def test_conservative_update_keeps_per_edge_semantics():
+    """Conservative update is order-dependent and non-linear, so the collapse
+    is ineligible: the API must not grow a preagg knob, and the result must
+    compose sequentially (split batch == whole batch), which a duplicate
+    collapse would break."""
+    assert "preagg" not in inspect.signature(
+        GLavaSketch.update_conservative
+    ).parameters
+    sk = _sketch(depth=2, wr=32, wc=32)
+    src, dst, w = _dup_heavy(400, n_keys=10, seed=7)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    whole = sk.update_conservative(s, d, ww)
+    split = sk.update_conservative(s[:200], d[:200], ww[:200])
+    split = split.update_conservative(s[200:], d[200:], ww[200:])
+    np.testing.assert_array_equal(
+        np.asarray(whole.counters), np.asarray(split.counters)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass kernel ref twin == the three-pass composition (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_ref_matches_three_pass_composition():
+    sk = _sketch(seed=9)
+    src, dst, w = _dup_heavy(1500, n_keys=200, signed=True, seed=9)
+    s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    rows, cols = sk.hash_edges(s, d)
+    c1, rf1, cf1, touched = fused_ingest_ref(
+        sk.counters, sk.row_flows, sk.col_flows, rows, cols, ww
+    )
+    c2 = ingest(sk.counters, rows, cols, ww, backend="scatter")
+    rf2, cf2 = scatter_flows(sk.row_flows, sk.col_flows, rows, cols, ww)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(rf1), np.asarray(rf2))
+    np.testing.assert_array_equal(np.asarray(cf1), np.asarray(cf2))
+    # the bitmap marks exactly the row buckets of touched_row_keys
+    keys = touched_row_keys(src)
+    key_rows = np.asarray(sk.row_hash(jnp.asarray(keys)))  # (d, K)
+    want = np.zeros(sk.row_flows.shape, bool)
+    for di in range(want.shape[0]):
+        want[di, np.unique(key_rows[di])] = True
+    np.testing.assert_array_equal(np.asarray(touched), want)
+
+
+# ---------------------------------------------------------------------------
+# GraphStream session boundary
+# ---------------------------------------------------------------------------
+
+
+def _open(ingest_backend="scatter", preagg="auto", **kw):
+    cfg = SketchConfig(depth=3, width_rows=128, width_cols=128)
+    return GraphStream.open(
+        cfg,
+        ingest_backend=ingest_backend,
+        query_backend="jnp",
+        preagg=preagg,
+        **kw,
+    )
+
+
+def test_stream_preagg_on_off_bit_identical():
+    a, b = _open(preagg="on"), _open(preagg="off")
+    for seed in (0, 1):
+        src, dst, w = _dup_heavy(4000, seed=seed)
+        ra = a.ingest(src, dst, w)
+        rb = b.ingest(src, dst, w)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(ra.touched_keys)),
+            np.sort(np.asarray(rb.touched_keys)),
+        )
+    a.flush(), b.flush()
+    _assert_sketch_equal(a._sketch, b._sketch)
+
+
+def test_stream_fused_matches_scatter_session():
+    a, b = _open(ingest_backend="fused"), _open(ingest_backend="scatter")
+    src, dst, w = _dup_heavy(3000, seed=2)
+    ra = a.ingest(src, dst, w)
+    b.ingest(src, dst, w)
+    a.flush(), b.flush()
+    _assert_sketch_equal(a._sketch, b._sketch)
+    # the fused receipt carries the row bitmap, not a key list
+    assert ra.touched_rows is not None
+    assert ra.touched_rows.shape == (3, 128) and ra.touched_rows.dtype == bool
+    assert ra.touched_keys is None
+
+
+def test_stream_fused_bitmap_drives_incremental_refresh():
+    """Reach answers across plain / preagg / fused sessions agree, after the
+    fused session's second tick rode the bitmap incremental refresh."""
+    sessions = [
+        _open(preagg="off"),
+        _open(preagg="on"),
+        _open(ingest_backend="fused"),
+    ]
+    rng = np.random.default_rng(4)
+    q_src = rng.integers(0, 30, 16).astype(np.uint32)
+    q_dst = rng.integers(0, 30, 16).astype(np.uint32)
+    for tick_seed in (10, 11):
+        rng2 = np.random.default_rng(tick_seed)
+        src = rng2.integers(0, 30, 500).astype(np.uint32)
+        dst = rng2.integers(0, 30, 500).astype(np.uint32)
+        for gs in sessions:
+            gs.ingest(src, dst)
+            gs.reachable(q_src, q_dst)  # forces a closure build/refresh
+    answers = [np.asarray(gs.reachable(q_src, q_dst)) for gs in sessions]
+    np.testing.assert_array_equal(answers[0], answers[1])
+    np.testing.assert_array_equal(answers[0], answers[2])
+    fused = sessions[2]
+    assert fused.engine.closure_refreshes == 1
+    assert fused.engine.closure_incremental_refreshes >= 1
+
+
+def test_stream_deletes_force_full_rebuild():
+    gs = _open(ingest_backend="fused")
+    src = np.arange(10, dtype=np.uint32)
+    dst = np.arange(10, 20, dtype=np.uint32)
+    gs.ingest(src, dst)
+    gs.reachable(src[:2], dst[:2])
+    assert gs.engine.closure_refreshes == 1
+    gs.ingest(src, dst, np.full(10, -1.0, np.float32))  # turnstile delete
+    gs.reachable(src[:2], dst[:2])
+    # closure_refresh is additions-only exact: deletes must poison the cache
+    assert gs.engine.closure_refreshes == 2
+
+
+# ---------------------------------------------------------------------------
+# refresh_closure: bitmap path == full rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_closure_bitmap_matches_full_rebuild():
+    sk0 = _sketch(depth=2, wr=64, wc=64, seed=13)
+    src1, dst1, _ = _dup_heavy(300, n_keys=20, seed=13)
+    sk1 = sk0.update(jnp.asarray(src1), jnp.asarray(dst1))
+    # few distinct new sources, so touched rows stay under the frac cap
+    # (CLOSURE_REFRESH_FRAC * w_r) and the incremental path actually runs
+    src2, dst2, _ = _dup_heavy(120, n_keys=8, seed=14)
+    sk2 = sk1.update(jnp.asarray(src2), jnp.asarray(dst2))
+    q = jnp.asarray(np.arange(6, dtype=np.uint32))
+
+    fresh = QueryEngine("jnp", pad_q=8)
+    want = np.asarray(fresh.reach(sk2, q, q, epoch=1))
+
+    inc = QueryEngine("jnp", pad_q=8)
+    inc.reach(sk1, q, q, epoch=0)
+    rows = np.asarray(sk1.row_hash(jnp.asarray(np.unique(src2))))
+    bitmap = np.zeros(sk1.row_flows.shape, bool)
+    for di in range(bitmap.shape[0]):
+        bitmap[di, np.unique(rows[di])] = True
+    inc.refresh_closure(sk2, bitmap, epoch=1)
+    got = np.asarray(inc.reach(sk2, q, q, epoch=1))
+    np.testing.assert_array_equal(got, want)
+    assert inc.closure_refreshes == 1
+    assert inc.closure_incremental_refreshes == 1
+
+
+# ---------------------------------------------------------------------------
+# sliding window
+# ---------------------------------------------------------------------------
+
+
+def test_window_preagg_matches_off():
+    cfg = SketchConfig(depth=2, width_rows=64, width_cols=64)
+    a = SlidingWindowSketch.empty(cfg, 3, jax.random.key(21))
+    b = SlidingWindowSketch.empty(cfg, 3, jax.random.key(21))
+    for seed in (30, 31):
+        src, dst, w = _dup_heavy(2000, signed=True, seed=seed)
+        s, d, ww = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+        a = a.update(s, d, ww, preagg="on")
+        b = b.update(s, d, ww, preagg="off")
+        a, b = a.advance(), b.advance()
+    _assert_sketch_equal(a.window_sketch(), b.window_sketch())
+    np.testing.assert_array_equal(np.asarray(a.slices), np.asarray(b.slices))

@@ -17,6 +17,8 @@ from repro.kernels.flow.ops import flows
 from repro.kernels.flow.ref import flows_ref
 from repro.kernels.ingest.ops import sketch_ingest
 from repro.kernels.ingest.ref import sketch_ingest_ref
+from repro.kernels.ingest_fused.ops import fused_ingest
+from repro.kernels.ingest_fused.ref import fused_ingest_ref
 from repro.kernels.query.ops import edge_query_cells, edge_query_min
 from repro.kernels.query.ref import edge_query_min_ref, edge_query_ref
 from repro.core import reach as reach_mod
@@ -162,6 +164,90 @@ def test_countsketch_kernel_matches_compression_module():
     got = np.asarray(countsketch(vec, st.hash))
     ref = np.asarray(_sketch(st, vec))
     np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-4)
+
+
+FUSED_SHAPES = [
+    (1, 64, 64, 33),
+    (2, 256, 128, 512),
+    (3, 300, 200, 1000),
+]
+
+
+@pytest.mark.parametrize("d,wr,wc,b", FUSED_SHAPES)
+def test_fused_ingest_kernel_matches_ref(d, wr, wc, b):
+    """One-pass fused kernel (interpret mode) vs the three-pass jnp twin:
+    counters, row_flows, col_flows bit-equal, touched bitmap identical —
+    including -1 sentinel rows (padding slots must be inert everywhere)."""
+    counters = jnp.asarray(RNG.integers(0, 1000, (d, wr, wc)), jnp.float32)
+    rf = jnp.asarray(RNG.integers(0, 1000, (d, wr)), jnp.float32)
+    cf = jnp.asarray(RNG.integers(0, 1000, (d, wc)), jnp.float32)
+    rows = jnp.asarray(RNG.integers(0, wr, (d, b)), jnp.int32)
+    # sprinkle padding sentinels into every depth
+    sentinel = RNG.random((d, b)) < 0.1
+    rows = jnp.where(jnp.asarray(sentinel), -1, rows)
+    cols = jnp.asarray(RNG.integers(0, wc, (d, b)), jnp.int32)
+    w = jnp.asarray(RNG.integers(1, 9, b), jnp.float32)
+    got = fused_ingest(counters, rf, cf, rows, cols, w, interpret=True)
+    ref = fused_ingest_ref(counters, rf, cf, rows, cols, w)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_fused_ingest_fp_weights_close():
+    counters = jnp.zeros((2, 128, 128), jnp.float32)
+    rf = jnp.zeros((2, 128), jnp.float32)
+    cf = jnp.zeros((2, 128), jnp.float32)
+    rows = jnp.asarray(RNG.integers(0, 128, (2, 700)), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, 128, (2, 700)), jnp.int32)
+    w = jnp.asarray(RNG.normal(0, 1, 700), jnp.float32)
+    got = fused_ingest(counters, rf, cf, rows, cols, w, interpret=True)
+    ref = fused_ingest_ref(counters, rf, cf, rows, cols, w)
+    for g, r in zip(got[:3], ref[:3]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=1e-6, atol=1e-5
+        )
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(ref[3]))
+
+
+def test_fused_ingest_sentinel_rows_are_inert():
+    """An all-sentinel batch changes nothing: not counters, not either
+    register plane, and the touched bitmap stays empty."""
+    counters = jnp.asarray(RNG.integers(0, 50, (2, 64, 64)), jnp.float32)
+    rf = jnp.asarray(RNG.integers(0, 50, (2, 64)), jnp.float32)
+    cf = jnp.asarray(RNG.integers(0, 50, (2, 64)), jnp.float32)
+    rows = jnp.full((2, 40), -1, jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, 64, (2, 40)), jnp.int32)
+    w = jnp.ones(40, jnp.float32)
+    got = fused_ingest(counters, rf, cf, rows, cols, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(counters))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(rf))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(cf))
+    assert not bool(np.asarray(got[3]).any())
+
+
+def test_sketch_update_fused_matches_scatter_composition():
+    """GLavaSketch.update_fused == update(backend='scatter') bit-exactly,
+    and its touched bitmap marks exactly the hashed rows of the batch."""
+    cfg = SketchConfig(depth=3, width_rows=128, width_cols=128)
+    sk = GLavaSketch.empty(cfg, jax.random.key(5))
+    src = jnp.asarray(RNG.integers(0, 900, 600), jnp.uint32)
+    dst = jnp.asarray(RNG.integers(0, 900, 600), jnp.uint32)
+    fused, touched = sk.update_fused(src, dst)
+    oracle = sk.update(src, dst, backend="scatter", preagg="off")
+    np.testing.assert_array_equal(
+        np.asarray(fused.counters), np.asarray(oracle.counters)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fused.row_flows), np.asarray(oracle.row_flows)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fused.col_flows), np.asarray(oracle.col_flows)
+    )
+    rows = np.asarray(sk.row_hash(src))  # (d, B)
+    want = np.zeros((3, 128), bool)
+    for di in range(3):
+        want[di, np.unique(rows[di])] = True
+    np.testing.assert_array_equal(np.asarray(touched), want)
 
 
 def test_sketch_pallas_backend_via_core_api():
