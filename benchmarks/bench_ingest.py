@@ -15,6 +15,7 @@ CLI (the backend-sweep mode):
     python -m benchmarks.bench_ingest --backend scatter
     python -m benchmarks.bench_ingest --backend all --batch 65536
     python -m benchmarks.bench_ingest --assert-preagg-win --batch 8192
+    python -m benchmarks.bench_ingest --tenants 1 64 1024
 
 ``--assert-preagg-win`` exits non-zero unless the pre-aggregated session
 path beats the plain scatter session on a zipf(1.5) batch — the CI smoke
@@ -40,6 +41,12 @@ from repro.core import GLavaSketch, SketchConfig
 from repro.core.ingest import BACKENDS
 
 DEPTH, WIDTH = 4, 1024
+
+# The fleet sweep stacks up to 1024 tenant sketches on one host, so it runs
+# at a narrower width (T=1024 × K=1 × d=4 × 128² × f32 ≈ 256 MB).
+FLEET_WIDTH = 128
+FLEET_TENANTS = (1, 64, 1024)
+FLEET_BASELINE_T = 64
 
 
 def _stream(b: int, seed: int = 0):
@@ -168,6 +175,99 @@ def preagg_session_rows(batch: int = 32768):
     return rows
 
 
+def _fleet_rate(fleet, ids, src, dst, w):
+    """(compile_ms, steady_us) for one mixed batch through the fleet."""
+    def step():
+        fleet.ingest_mixed(ids, src, dst, w)
+        fleet.flush()
+        return fleet._state.cursor
+
+    return _compile_then_steady(step, iters=3)
+
+
+def fleet_sweep(tenants=FLEET_TENANTS, batch: int = 32768,
+                arrival_batch: int = 512, depth: int = DEPTH,
+                width: int = FLEET_WIDTH):
+    """Multi-tenant fleet ingest (DESIGN.md Section 11): one mixed
+    (tenant, edge) arrival batch is ONE stacked donated dispatch, so
+    edges/sec holds roughly flat as T grows.  Two figures:
+
+    - throughput: ``fleet_ingest_T{T}`` per-T rows at ``batch`` edges —
+      the stacked scatter's steady rate on a bulk mixed batch;
+    - the acceptance comparison: the SAME ``arrival_batch``-edge mixed
+      tick served by the fleet vs a loop over 64 independent GraphStream
+      sessions (slice + dispatch + flush each).  Small per-tenant arrivals
+      are the serving regime the fleet targets — the baseline pays 64
+      dispatch overheads plus the per-session pad-bucket waste (8 edges
+      pad to 256) per tick, the fleet pays one dispatch — and
+      ``speedup_vs_sessions`` on the T=64 arrival row is the Section 11
+      acceptance figure (≥10×)."""
+    from repro.fleet import SketchFleet
+
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 1 << 20, batch).astype(np.uint32)
+    dst = rng.integers(0, 1 << 20, batch).astype(np.uint32)
+    w = rng.integers(1, 5, batch).astype(np.float32)
+    ids64 = rng.integers(0, FLEET_BASELINE_T, batch)
+
+    a_src, a_dst, a_w = src[:arrival_batch], dst[:arrival_batch], w[:arrival_batch]
+    a_ids = ids64[:arrival_batch]
+    sessions = [
+        GraphStream.open(cfg, ingest_backend="scatter", query_backend="jnp")
+        for _ in range(FLEET_BASELINE_T)
+    ]
+    by_tenant = [np.nonzero(a_ids == t)[0] for t in range(FLEET_BASELINE_T)]
+
+    def step_sessions():
+        for t, idx in enumerate(by_tenant):
+            sessions[t].ingest(a_src[idx], a_dst[idx], a_w[idx])
+        for s in sessions:
+            s.flush()
+        return sessions[0]._sketch.counters
+
+    compile_ms, us = _compile_then_steady(step_sessions, iters=3)
+    base_eps = arrival_batch / (us / 1e6)
+    record(
+        "fleet_baseline_64_sessions", us / arrival_batch, batch=arrival_batch,
+        tenants=FLEET_BASELINE_T, fleet_edges_per_s=round(base_eps),
+        compile_ms=round(compile_ms, 1),
+        note="loop over 64 independent GraphStream sessions, one "
+        f"{arrival_batch}-edge mixed arrival tick",
+    )
+
+    fleet64 = SketchFleet.open(cfg, capacity=FLEET_BASELINE_T)
+    compile_ms, us = _fleet_rate(fleet64, a_ids, a_src, a_dst, a_w)
+    arrival_eps = arrival_batch / (us / 1e6)
+    record(
+        f"fleet_ingest_T{FLEET_BASELINE_T}_arrival", us / arrival_batch,
+        batch=arrival_batch, tenants=FLEET_BASELINE_T,
+        fleet_edges_per_s=round(arrival_eps),
+        compile_ms=round(compile_ms, 1), dispatches_per_batch=1,
+        speedup_vs_sessions=round(arrival_eps / base_eps, 2),
+        note="same mixed arrival tick as the 64-session baseline, one "
+        "stacked dispatch",
+    )
+
+    out = {FLEET_BASELINE_T: arrival_eps}
+    for t_count in tenants:
+        fleet = SketchFleet.open(cfg, capacity=t_count)
+        ids = (
+            ids64 % t_count
+            if t_count <= FLEET_BASELINE_T
+            else rng.integers(0, t_count, batch)
+        )
+        compile_ms, us = _fleet_rate(fleet, ids, src, dst, w)
+        eps = batch / (us / 1e6)
+        out[t_count] = eps
+        record(
+            f"fleet_ingest_T{t_count}", us / batch, batch=batch,
+            tenants=t_count, fleet_edges_per_s=round(eps),
+            compile_ms=round(compile_ms, 1), dispatches_per_batch=1,
+        )
+    return out, base_eps
+
+
 def run():
     cfg = SketchConfig(depth=DEPTH, width_rows=WIDTH, width_cols=WIDTH)
     sk = GLavaSketch.empty(cfg, jax.random.key(0))
@@ -186,6 +286,10 @@ def run():
     # backend × preagg × duplicate-rate grid + the session fast-path rows
     preagg_grid(batch=b)
     preagg_session_rows(batch=b)
+
+    # multi-tenant fleet rows: fleet_edges_per_s per T + the 64-session
+    # baseline (the Section 11 speedup_vs_sessions figure)
+    fleet_sweep(batch=b)
 
     # O(1)-per-edge invariant: per-edge cost must not grow with sketch fill
     scat = jax.jit(
@@ -216,7 +320,20 @@ def main():
         help="CI gate: fail unless the pre-aggregated session path beats "
              "the plain scatter session on a zipf(1.5) batch",
     )
+    ap.add_argument(
+        "--tenants", type=int, nargs="+", default=None, metavar="T",
+        help="fleet sweep: time mixed multi-tenant ingest at these tenant "
+             f"counts (e.g. --tenants 1 64 1024; runs at width {FLEET_WIDTH} "
+             "and records fleet_edges_per_s plus the 64-session baseline)",
+    )
     args = ap.parse_args()
+    if args.tenants:
+        eps, base_eps = fleet_sweep(tuple(args.tenants), batch=args.batch,
+                                    depth=args.depth)
+        print(f"64-session baseline: {base_eps:,.0f} edges/s")
+        for t, v in eps.items():
+            print(f"fleet T={t}: {v:,.0f} edges/s ({v / base_eps:.1f}x baseline)")
+        return
     if args.assert_preagg_win:
         _, _, eps_on = session_rate(1.5, args.batch, "on",
                                     depth=args.depth, width=args.width)

@@ -263,11 +263,74 @@ def bench_subscription_ticks(smoke: bool = False, config=None):
     )
 
 
+FLEET_QUERY_WIDTH = 128
+FLEET_QUERY_TENANTS = (1, 64, 1024)
+
+
+def bench_fleet_queries(tenants=FLEET_QUERY_TENANTS, smoke: bool = False):
+    """Queries/sec per family through the FleetQueryEngine — every query
+    carries a tenant lane, one jit serves every tenant mix, and reach
+    answers against the batched per-tenant closure stack.  Records
+    ``fleet_qps`` per (family, T) so BENCH_queries.json tracks multi-tenant
+    serving throughput alongside the single-session qps rows."""
+    from repro.fleet import SketchFleet
+
+    width = FLEET_QUERY_WIDTH
+    n_edges = 20_000 if smoke else 100_000
+    q = 1024 if smoke else 4096
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, n_edges, n_edges).astype(np.uint32)
+    dst = rng.integers(0, n_edges, n_edges).astype(np.uint32)
+    for t_count in tenants:
+        fleet = SketchFleet.open(
+            SketchConfig(4, width, width), capacity=t_count
+        )
+        fleet.ingest_mixed(rng.integers(0, t_count, n_edges), src, dst)
+        fleet.flush()
+        eng, st = fleet.engine, fleet._state
+        slots = jnp.asarray(rng.integers(0, t_count, q), jnp.int32)
+        qs = jnp.asarray(src[:q], jnp.uint32)
+        qd = jnp.asarray(dst[:q], jnp.uint32)
+        for family, fn, args in (
+            ("edge", eng.edge, (st, slots, qs, qd)),
+            ("in_flow", eng.in_flow, (st, slots, qs)),
+            ("out_flow", eng.out_flow, (st, slots, qs)),
+        ):
+            us = time_fn(fn, *args)
+            record(
+                f"fleet_qps_{family}_T{t_count}", us / q, batch=q,
+                tenants=t_count, fleet_qps=round(q / (us / 1e6), 1),
+            )
+        # reach: closures for the queried tenants build once (batched),
+        # then every call is one stacked gather dispatch.  Cap the distinct
+        # closure stack at 64 tenants — the O(w³ log w) per-tenant build is
+        # the cost axis, not the gather.
+        r_slots = np.asarray(slots) % min(t_count, 64)
+        slot_epoch = {
+            sess._slot: sess._epoch
+            for sess in fleet._sessions.values()
+            if sess._slot is not None
+        }
+        epochs = {int(s): slot_epoch.get(int(s), 0) for s in np.unique(r_slots)}
+        eng.reach(st, r_slots, qs, qd, epochs)  # warm: batched closure build
+        us = time_fn(eng.reach, st, r_slots, qs, qd, epochs)
+        record(
+            f"fleet_qps_reach_T{t_count}", us / q, batch=q, tenants=t_count,
+            distinct_tenants=len(epochs), fleet_qps=round(q / (us / 1e6), 1),
+            closure_builds=eng.closure_builds,
+        )
+
+
 def run(smoke: bool = False):
     bench_reachability_precision()
     bench_subgraph_semantics()
     bench_query_throughput(smoke=smoke)
     bench_subscription_ticks(smoke=smoke)
+    # smoke (CI) keeps the sweep at T<=64; the trajectory run records the
+    # full {1, 64, 1024} grid
+    bench_fleet_queries(
+        tenants=(1, 64) if smoke else FLEET_QUERY_TENANTS, smoke=smoke
+    )
 
 
 def main():
@@ -288,8 +351,15 @@ def main():
                     "rebuild baseline is O(w^3 log w); nonsquare is "
                     "excluded: the workload's reach family needs a square "
                     "sketch)")
+    ap.add_argument(
+        "--tenants", type=int, nargs="+", default=None, metavar="T",
+        help="fleet sweep only: fleet_qps per query family at these tenant "
+        f"counts (e.g. --tenants 1 64 1024; width {FLEET_QUERY_WIDTH})",
+    )
     args = ap.parse_args()
-    if args.preset:
+    if args.tenants:
+        bench_fleet_queries(tuple(args.tenants), smoke=args.smoke)
+    elif args.preset:
         from repro.configs import glava
 
         cfg = {

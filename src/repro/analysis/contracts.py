@@ -400,6 +400,101 @@ def _distributed_point_entry() -> TracedEntry:
     )
 
 
+def _fleet_fixture():
+    """A 4-slot fleet stack plus mixed query lanes (slot as a DATA lane)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.sketch import SketchConfig
+    from repro.fleet.stack import FleetSketch
+
+    cfg = SketchConfig(
+        depth=_FIXTURE_DEPTH, width_rows=_FIXTURE_WIDTH, width_cols=_FIXTURE_WIDTH
+    )
+    st = FleetSketch.empty(cfg, 4, jax.random.key(0))
+    slots = jnp.tile(jnp.arange(4, dtype=jnp.int32), 2)
+    src = jnp.arange(8, dtype=jnp.uint32)
+    dst = jnp.arange(8, 16, dtype=jnp.uint32)
+    w = jnp.ones(8, jnp.float32)
+    return st, slots, src, dst, w
+
+
+def _fleet_ingest_entry() -> TracedEntry:
+    """The stacked scatter — T tenants folded by ONE update trace."""
+    st, slots, src, dst, w = _fleet_fixture()
+    return TracedEntry(
+        lambda sl, s, d, ww: st.update(sl, s, d, ww).counters,
+        (slots, src, dst, w),
+        tuple(st.counters.shape),
+    )
+
+
+def _fleet_ingest_jit_boundary() -> TracedEntry:
+    """The REAL FleetIngestEngine donated dispatch — the donation contract
+    breaks if the engine stops donating the stacked pytree."""
+    import jax
+
+    from repro.fleet.ingest import FleetIngestEngine
+
+    st, slots, src, dst, w = _fleet_fixture()
+    eng = FleetIngestEngine(st)
+    leaves = jax.tree_util.tree_leaves(st)
+    uniq = tuple(leaves[i] for i in eng._uniq_leaf_idx)
+    return TracedEntry(
+        fn=eng._jit_update,
+        args=(uniq, slots, src, dst, w),
+        jit_fn=eng._jit_update,
+    )
+
+
+def _fleet_query_entry(family: str) -> Callable[[], TracedEntry]:
+    def build():
+        import jax.numpy as jnp
+
+        from repro.fleet import query as fq
+
+        st, slots, src, dst, w = _fleet_fixture()
+        shape = tuple(st.counters.shape)
+        if family == "edge":
+            return TracedEntry(fq.fleet_edge_query, (st, slots, src, dst), shape)
+        if family in ("in_flow", "out_flow", "flow"):
+            fn = getattr(fq, f"fleet_{family}")
+            return TracedEntry(fn, (st, slots, src), shape)
+        if family == "heavy_rel_vec":
+            thetas = jnp.full(src.shape, 0.5, jnp.float32)
+            return TracedEntry(
+                fq.fleet_heavy_rel_vec, (st, slots, src, thetas), shape
+            )
+        if family == "subgraph_batch":
+            s2 = jnp.stack([src[:4], src[4:]])
+            d2 = jnp.stack([dst[:4], dst[4:]])
+            mask = jnp.ones(s2.shape, bool)
+            return TracedEntry(
+                fq.fleet_subgraph_batch,
+                (st, slots[: s2.shape[0]], s2, d2, mask),
+                shape,
+            )
+        sel = jnp.arange(4, dtype=jnp.int32)
+        if family == "reach_pre":
+            closures = fq.fleet_closure_build(st.counters, sel)
+            return TracedEntry(
+                fq.fleet_reach_pre, (st, closures, slots, src, dst), shape
+            )
+        if family == "closure":
+            return TracedEntry(fq.fleet_closure_build, (st.counters, sel), shape)
+        if family == "closure_refresh":
+            closures = fq.fleet_closure_build(st.counters, sel)
+            rows = jnp.tile(st.row_hash(src[:4])[None], (4, 1, 1))
+            return TracedEntry(
+                fq.fleet_closure_refresh,
+                (closures, st.counters, sel, rows),
+                shape,
+            )
+        raise ValueError(f"no fixture for fleet query family {family!r}")
+
+    return build
+
+
 ENTRY_POINTS: Tuple[EntryPoint, ...] = (
     # -- every IngestEngine backend dispatch ------------------------------
     EntryPoint("ingest.scatter", HOT, _ingest_entry("scatter")),
@@ -449,6 +544,40 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
     # -- the distributed plane (collectives MUST sit under shard_map) ------
     EntryPoint("distributed.ingest", HOT, _distributed_ingest_entry),
     EntryPoint("distributed.point_query", HOT, _distributed_point_entry),
+    # -- the fleet plane: T tenants, one dispatch (DESIGN.md Section 11) ---
+    EntryPoint("fleet.ingest.update", HOT, _fleet_ingest_entry),
+    EntryPoint(
+        "fleet.ingest.jit_boundary",
+        HOT + ("donation-applied",),
+        _fleet_ingest_jit_boundary,
+    ),
+    EntryPoint("fleet.query.edge", HOT, _fleet_query_entry("edge")),
+    EntryPoint(
+        "fleet.query.in_flow", REGISTER_SERVED, _fleet_query_entry("in_flow")
+    ),
+    EntryPoint(
+        "fleet.query.out_flow", REGISTER_SERVED, _fleet_query_entry("out_flow")
+    ),
+    EntryPoint("fleet.query.flow", REGISTER_SERVED, _fleet_query_entry("flow")),
+    EntryPoint(
+        "fleet.query.heavy_rel_vec",
+        REGISTER_SERVED,
+        _fleet_query_entry("heavy_rel_vec"),
+    ),
+    EntryPoint(
+        "fleet.query.subgraph_batch", HOT, _fleet_query_entry("subgraph_batch")
+    ),
+    EntryPoint(
+        "fleet.query.reach_pre",
+        REGISTER_SERVED,
+        _fleet_query_entry("reach_pre"),
+    ),
+    EntryPoint("fleet.query.closure", HOT, _fleet_query_entry("closure")),
+    EntryPoint(
+        "fleet.query.closure_refresh",
+        HOT,
+        _fleet_query_entry("closure_refresh"),
+    ),
 )
 
 
@@ -614,8 +743,166 @@ def check_subscription_tick() -> List[Violation]:
     return out
 
 
+def _fleet_fixture_config():
+    from repro.core.sketch import SketchConfig
+
+    return SketchConfig(
+        depth=_FIXTURE_DEPTH,
+        width_rows=_FIXTURE_WIDTH,
+        width_cols=_FIXTURE_WIDTH,
+    )
+
+
+def check_fleet_permutation() -> List[Violation]:
+    """Tenant ids are DATA, not jit structure: replaying the same-shape
+    mixed workload under permuted tenant-id assignments must not grow the
+    fleet's ingest jit cache (one compile serves every tenant mix) or any
+    query-family cache once the shape ladder is warm."""
+    from repro.fleet import SketchFleet
+
+    fleet = SketchFleet.open(_fleet_fixture_config(), capacity=4)
+    rng = np.random.default_rng(0)
+    rounds = ([0, 1, 2, 3], [0, 1, 2, 3], [3, 0, 1, 2], [1, 3, 0, 2])
+    out: List[Violation] = []
+    warm: Optional[int] = None
+    for i, perm in enumerate(rounds):
+        ids = np.asarray(perm)[rng.integers(0, 4, 64)]
+        src = rng.integers(0, 100, 64).astype(np.uint32)
+        dst = rng.integers(0, 100, 64).astype(np.uint32)
+        fleet.ingest_mixed(ids, src, dst)
+        # A small delete per tenant poisons touched-tracking, so reach
+        # deterministically takes the full-build path every round — this
+        # check is about cache stability, not the refresh ladder.
+        fleet.ingest_mixed(
+            np.asarray(perm),
+            src[:4],
+            dst[:4],
+            -np.ones(4, np.float32),
+        )
+        for t in perm:
+            sess = fleet.tenant(t)
+            sess.edge_frequency(src[:8], dst[:8])
+            sess.in_flow(src[:8])
+            sess.reachable(src[:4], dst[:4])
+        ingest_sz = fleet._ingest._cache_size()
+        if ingest_sz is not None and ingest_sz > 1:
+            out.append(
+                Violation(
+                    rule="retrace",
+                    subject="fleet.ingest",
+                    message=(
+                        f"fleet ingest traced {ingest_sz} signatures after "
+                        f"round {i} (want exactly 1 — the tenant axis must "
+                        "ride the scatter index, not the trace)"
+                    ),
+                    pass_name="jaxpr",
+                )
+            )
+            break
+        qsz = fleet.engine._cache_size()
+        if i == 1:
+            warm = qsz
+        if warm is not None and i > 1 and qsz > warm:
+            out.append(
+                Violation(
+                    rule="retrace",
+                    subject="fleet.query",
+                    message=(
+                        f"fleet query caches grew {warm} -> {qsz} under a "
+                        "tenant-id permutation (round "
+                        f"{i}): a jit cache key leaks the tenant assignment"
+                    ),
+                    pass_name="jaxpr",
+                )
+            )
+            break
+    return out
+
+
+def check_fleet_subscription_tick() -> List[Violation]:
+    """The fleet subscription tick contract: a standing reach+flow+edge
+    batch on one tenant over N additions-only mixed batches performs
+    exactly ONE full closure build, N-1 batched incremental refreshes, ONE
+    ingest compile, and never re-traces a family after its first tick."""
+    from repro.api.query import Query
+    from repro.fleet import SketchFleet
+
+    fleet = SketchFleet.open(_fleet_fixture_config(), capacity=4)
+    sess = fleet.tenant("hot")
+    sess.subscribe(
+        Query.reach(1, 2), Query.in_flow(2), Query.edge(1, 2), every=1
+    )
+    rng = np.random.default_rng(0)
+    sizes_after_first: Dict[str, Optional[int]] = {}
+    n_ticks = 3
+    for tick in range(n_ticks):
+        src = rng.integers(0, 30, 6).astype(np.uint32)
+        dst = rng.integers(0, 30, 6).astype(np.uint32)
+        sess.ingest(src, dst)
+        if tick == 0:
+            sizes_after_first = {
+                f: _cache_size(fn) for f, fn in fleet.engine._jits.items()
+            }
+    out: List[Violation] = []
+    if fleet.engine.closure_builds != 1:
+        out.append(
+            Violation(
+                rule="retrace",
+                subject="fleet.subscription.tick",
+                message=(
+                    f"{fleet.engine.closure_builds} full closure builds over "
+                    f"{n_ticks} additions-only ticks (want exactly 1 — later "
+                    "ticks must ride the batched incremental refresh)"
+                ),
+                pass_name="jaxpr",
+            )
+        )
+    if fleet.engine.closure_incremental_refreshes != n_ticks - 1:
+        out.append(
+            Violation(
+                rule="retrace",
+                subject="fleet.subscription.tick",
+                message=(
+                    f"{fleet.engine.closure_incremental_refreshes} incremental "
+                    f"refreshes over {n_ticks} ticks (want {n_ticks - 1})"
+                ),
+                pass_name="jaxpr",
+            )
+        )
+    ingest_sz = fleet._ingest._cache_size()
+    if ingest_sz is not None and ingest_sz != 1:
+        out.append(
+            Violation(
+                rule="retrace",
+                subject="fleet.subscription.tick",
+                message=(
+                    f"fleet ingest traced {ingest_sz} signatures over "
+                    f"{n_ticks} same-shape ticks (want exactly 1)"
+                ),
+                pass_name="jaxpr",
+            )
+        )
+    for f, fn in fleet.engine._jits.items():
+        before, after = sizes_after_first.get(f), _cache_size(fn)
+        if before is not None and after is not None and after > before:
+            out.append(
+                Violation(
+                    rule="retrace",
+                    subject="fleet.subscription.tick",
+                    message=(
+                        f"fleet family {f!r} re-traced after its first tick "
+                        f"({before} -> {after} jit cache entries)"
+                    ),
+                    pass_name="jaxpr",
+                )
+            )
+    return out
+
+
 DYNAMIC_CHECKS: Dict[str, Callable[[], List[Violation]]] = {
     "retrace.query_families": check_retrace_query_families,
     "retrace.closure_cache": check_closure_cache_value_keyed,
     "retrace.subscription_tick": check_subscription_tick,
+    "retrace.fleet_permutation": check_fleet_permutation,
+    "retrace.fleet_subscription_tick": check_fleet_subscription_tick,
 }

@@ -37,8 +37,13 @@ from repro.analysis.contracts import Violation
 
 # -- per-rule path scopes (POSIX-style, relative to the lint root) ----------
 
-DIRECT_JIT_DIRS = ("core", "api", "kernels", "serve")
-DIRECT_JIT_ALLOW = ("core/query_engine.py", "api/stream.py")
+DIRECT_JIT_DIRS = ("core", "api", "kernels", "serve", "fleet")
+DIRECT_JIT_ALLOW = (
+    "core/query_engine.py",
+    "api/stream.py",
+    "fleet/ingest.py",
+    "fleet/query.py",
+)
 
 HOST_SYNC_DIRS = ("kernels",)
 HOST_SYNC_FILES = ("core/queries.py", "core/reach.py", "core/window.py")

@@ -581,6 +581,11 @@ class GraphStream:
 
     def _unsubscribe(self, sub: Subscription) -> None:
         self._subs.pop(sub.id, None)
+        if sub.plan.has_reach:
+            # The cancelled plan may be the only closure consumer; session
+            # teardown/reuse paths (and the fleet's slot recycling) must not
+            # find a stale closure that a later epoch tag could collide with.
+            self.engine.invalidate()
 
     def _note_touched(self, batch_delta) -> None:
         """Accumulate one batch's touched-row delta for the next closure

@@ -117,6 +117,51 @@ def scatter_register(register: jax.Array, buckets: jax.Array, weights: jax.Array
     )
 
 
+def scatter_stacked(
+    counters: jax.Array,   # (N, d, w_r, w_c) — N stacked sketch planes
+    row_flows: jax.Array,  # (N, d, w_r)
+    col_flows: jax.Array,  # (N, d, w_c)
+    plane: jax.Array,      # (B,) int32 — target plane per edge
+    rows: jax.Array,       # (d, B)
+    cols: jax.Array,       # (d, B)
+    weights: jax.Array,    # (B,)
+):
+    """Scatter-add one hashed edge batch into STACKED sketch planes.
+
+    The fleet plane stacks many same-config sketches (tenant × window
+    slice) along a leading axis; ``plane`` selects the target per edge, so
+    ONE flat 1-D scatter folds a mixed multi-tenant batch into the whole
+    stack — the one-dispatch fleet ingest.  Same ``promise_in_bounds``
+    idiom as :func:`scatter_register` (plane indices come from the slot
+    router, hashes from the family — in range by construction), and per
+    plane bit-identical to updating each plane's own sketch in the
+    integer-weight regime (fp32 integer addition is order-independent)."""
+    n, d, w_r, w_c = counters.shape
+    d_idx = jnp.arange(d, dtype=plane.dtype)[:, None]
+    base = plane[None, :] * d + d_idx                          # (d, B)
+    vals = jnp.broadcast_to(weights[None, :], rows.shape).astype(counters.dtype)
+    flat_c = ((base * w_r + rows) * w_c + cols).reshape(-1)
+    counters = (
+        counters.reshape(-1)
+        .at[flat_c]
+        .add(vals.reshape(-1), mode="promise_in_bounds")
+        .reshape(n, d, w_r, w_c)
+    )
+    row_flows = (
+        row_flows.reshape(-1)
+        .at[(base * w_r + rows).reshape(-1)]
+        .add(vals.reshape(-1), mode="promise_in_bounds")
+        .reshape(n, d, w_r)
+    )
+    col_flows = (
+        col_flows.reshape(-1)
+        .at[(base * w_c + cols).reshape(-1)]
+        .add(vals.reshape(-1), mode="promise_in_bounds")
+        .reshape(n, d, w_c)
+    )
+    return counters, row_flows, col_flows
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GLavaSketch:

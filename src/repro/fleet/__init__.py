@@ -1,0 +1,25 @@
+"""Multi-tenant fleet serving: T per-tenant gLava sketches, one device
+dispatch (DESIGN.md Section 11).
+
+    from repro.fleet import SketchFleet
+
+    fleet = SketchFleet.open("smoke", capacity=64, seed=0)
+    fleet.tenant("acme").ingest(src, dst)
+    fleet.ingest_mixed(tenant_ids, src, dst)          # the fleet hot path
+    res = fleet.tenant("acme").query(Query.edge("a", "b"))
+"""
+from repro.fleet.ingest import FleetIngestEngine, group_stream, pad_grouped
+from repro.fleet.query import FleetQueryEngine
+from repro.fleet.session import FleetStats, SketchFleet, TenantSession
+from repro.fleet.stack import FleetSketch
+
+__all__ = [
+    "FleetIngestEngine",
+    "FleetQueryEngine",
+    "FleetSketch",
+    "FleetStats",
+    "SketchFleet",
+    "TenantSession",
+    "group_stream",
+    "pad_grouped",
+]

@@ -1,0 +1,169 @@
+"""FleetSketch — T tenant gLava sketches stacked into one dense tensor.
+
+One fleet holds ``capacity`` tenant *slots*, each a full sliding-window
+gLava sketch, laid out as ``(T, K, d, w_r, w_c)`` counters plus the
+matching stacked flow registers and a per-tenant window cursor.  All
+slots share ONE hash family (seeded exactly like ``GLavaSketch.empty``,
+so a fleet tenant is bit-identical to an independent ``GraphStream``
+opened with the same seed) — sharing the family is what makes the stack
+vmappable/scatterable as a single dense operand and what lets closure
+planes be built for many tenants in one batched ``transitive_closure``
+call.
+
+``K`` is the sliding-window ring depth; non-windowed fleets use ``K=1``
+so the ingest scatter, eviction shards, and query gathers have ONE
+uniform code path.  Per-slot views (``tenant_sketch``) sum the window
+axis, mirroring ``SlidingWindowSketch.window_sketch()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import HashFamily, make_hash_family
+from repro.core.sketch import GLavaSketch, SketchConfig, scatter_stacked
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetSketch:
+    """The fleet's device state: every resident tenant's sketch, stacked."""
+
+    counters: jax.Array   # (T, K, d, w_r, w_c) float32
+    row_flows: jax.Array  # (T, K, d, w_r)
+    col_flows: jax.Array  # (T, K, d, w_c)
+    cursor: jax.Array     # (T,) int32 — active window slice per tenant
+    row_hash: HashFamily  # shared across all slots
+    col_hash: HashFamily  # IS row_hash for square configs (one leaf)
+    config: SketchConfig = dataclasses.field(metadata=dict(static=True))
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def empty(
+        config: SketchConfig,
+        capacity: int,
+        key: jax.Array,
+        window_slices: int = 1,
+    ) -> "FleetSketch":
+        # Seed derivation matches GLavaSketch.empty exactly: tenants of a
+        # fleet opened with seed s are bit-identical to GraphStream(seed=s).
+        kr, kc = jax.random.split(key)
+        row_hash = make_hash_family(kr, config.depth, config.width_rows)
+        col_hash = (
+            row_hash
+            if config.is_square
+            else make_hash_family(kc, config.depth, config.width_cols)
+        )
+        t, k, d = capacity, max(1, window_slices), config.depth
+        return FleetSketch(
+            jnp.zeros((t, k, d, config.width_rows, config.width_cols), jnp.float32),
+            jnp.zeros((t, k, d, config.width_rows), jnp.float32),
+            jnp.zeros((t, k, d, config.width_cols), jnp.float32),
+            jnp.zeros((t,), jnp.int32),
+            row_hash,
+            col_hash,
+            config,
+        )
+
+    @property
+    def capacity(self) -> int:
+        return self.counters.shape[0]
+
+    @property
+    def n_slices(self) -> int:
+        return self.counters.shape[1]
+
+    # -- ingest -------------------------------------------------------------
+
+    def update(
+        self,
+        slots: jax.Array,    # (B,) int32 — resident slot per edge
+        src: jax.Array,      # (B,) uint32
+        dst: jax.Array,      # (B,) uint32
+        weights: jax.Array,  # (B,) float32
+    ) -> "FleetSketch":
+        """Fold one mixed multi-tenant edge batch into the stack — a single
+        flat scatter regardless of how many tenants the batch spans.  Each
+        edge lands in its tenant's ACTIVE window slice (plane = slot·K +
+        cursor[slot]), so the tenant axis rides in the scatter index and no
+        per-tenant loop or vmap is needed."""
+        t, k, d, w_r, w_c = self.counters.shape
+        slots = slots.astype(jnp.int32)
+        plane = slots * k + self.cursor[slots]
+        r, c = self.row_hash(src), self.col_hash(dst)
+        counters, row_flows, col_flows = scatter_stacked(
+            self.counters.reshape(t * k, d, w_r, w_c),
+            self.row_flows.reshape(t * k, d, w_r),
+            self.col_flows.reshape(t * k, d, w_c),
+            plane, r, c, weights,
+        )
+        if not self.config.directed:
+            r2, c2 = self.row_hash(dst), self.col_hash(src)
+            counters, row_flows, col_flows = scatter_stacked(
+                counters, row_flows, col_flows, plane, r2, c2, weights
+            )
+        return dataclasses.replace(
+            self,
+            counters=counters.reshape(t, k, d, w_r, w_c),
+            row_flows=row_flows.reshape(t, k, d, w_r),
+            col_flows=col_flows.reshape(t, k, d, w_c),
+        )
+
+    # -- per-slot views / residency ops (host-side session plane) -----------
+
+    def tenant_sketch(self, slot: int) -> GLavaSketch:
+        """One tenant's window-summed sketch as a plain ``GLavaSketch`` —
+        the same view ``SlidingWindowSketch.window_sketch()`` serves."""
+        return GLavaSketch(
+            jnp.sum(self.counters[slot], axis=0),
+            self.row_hash,
+            self.col_hash,
+            self.config,
+            jnp.sum(self.row_flows[slot], axis=0),
+            jnp.sum(self.col_flows[slot], axis=0),
+        )
+
+    def tenant_shard(self, slot: int) -> dict:
+        """The tenant's evictable device state (window-resolved, per slice)
+        as a checkpointable pytree."""
+        return {
+            "counters": self.counters[slot],
+            "row_flows": self.row_flows[slot],
+            "col_flows": self.col_flows[slot],
+            "cursor": self.cursor[slot],
+        }
+
+    def load_tenant(self, slot: int, shard: dict) -> "FleetSketch":
+        return dataclasses.replace(
+            self,
+            counters=self.counters.at[slot].set(shard["counters"]),
+            row_flows=self.row_flows.at[slot].set(shard["row_flows"]),
+            col_flows=self.col_flows.at[slot].set(shard["col_flows"]),
+            cursor=self.cursor.at[slot].set(
+                jnp.asarray(shard["cursor"], jnp.int32)
+            ),
+        )
+
+    def clear_tenant(self, slot: int) -> "FleetSketch":
+        return dataclasses.replace(
+            self,
+            counters=self.counters.at[slot].set(0.0),
+            row_flows=self.row_flows.at[slot].set(0.0),
+            col_flows=self.col_flows.at[slot].set(0.0),
+            cursor=self.cursor.at[slot].set(0),
+        )
+
+    def advance(self, slot: int) -> "FleetSketch":
+        """Advance one tenant's window ring and zero the slice it wraps
+        onto — same semantics as ``SlidingWindowSketch.advance()``."""
+        nxt = (self.cursor[slot] + 1) % self.n_slices
+        return dataclasses.replace(
+            self,
+            cursor=self.cursor.at[slot].set(nxt),
+            counters=self.counters.at[slot, nxt].set(0.0),
+            row_flows=self.row_flows.at[slot, nxt].set(0.0),
+            col_flows=self.col_flows.at[slot, nxt].set(0.0),
+        )

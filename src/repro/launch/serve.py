@@ -4,7 +4,14 @@ stream with a mixed query workload served as ONE standing subscription —
 registered (and planner-compiled) once before the stream starts, then
 re-evaluated automatically every ``--every`` ingest batches, with
 reachability refreshed incrementally from each batch's touched rows —
-and prints throughput/accuracy stats."""
+and prints throughput/accuracy stats.
+
+``--tenants T`` switches to FLEET mode: the same synthetic stream is
+tagged with zipf-distributed tenant ids and served by one
+:class:`repro.fleet.SketchFleet` — every mixed batch is a single stacked
+device dispatch, a few hot tenants carry standing subscriptions, and the
+driver prints fleet-wide throughput plus the one-compile ingest cache
+stat (DESIGN.md Section 11)."""
 from __future__ import annotations
 
 import argparse
@@ -44,9 +51,17 @@ def main():
         help="auto = fused pallas multi-query kernel on TPU, jnp elsewhere "
         "(REPRO_QUERY_BACKEND overrides)",
     )
+    ap.add_argument(
+        "--tenants",
+        type=int,
+        default=0,
+        help="serve T tenants as one SketchFleet (0 = single session)",
+    )
     args = ap.parse_args()
 
     cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
+    if args.tenants:
+        return _serve_fleet(cfg, args)
     stream = GraphStream.open(
         cfg,
         window_slices=args.window_slices or None,
@@ -86,6 +101,52 @@ def main():
         f"({len(ticks)} events pending), last epoch {ticks[-1].epoch if ticks else '-'}, "
         f"closure full={stream.engine.closure_refreshes} "
         f"incremental={stream.engine.closure_incremental_refreshes}"
+    )
+
+
+def _serve_fleet(cfg: SketchConfig, args) -> None:
+    from repro.fleet import SketchFleet
+
+    fleet = SketchFleet.open(
+        cfg,
+        capacity=args.tenants,
+        window_slices=args.window_slices or None,
+    )
+    rng = np.random.default_rng(0)
+    data = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
+    # Skewed tenant load — a few hot tenants dominate, like real fleets.
+    ids = (rng.zipf(1.3, args.edges) - 1) % args.tenants
+
+    # Standing workloads on the three hottest tenants.
+    qs = rng.integers(0, args.nodes, 256).astype(np.uint32)
+    qd = rng.integers(0, args.nodes, 256).astype(np.uint32)
+    workload = QueryBatch(
+        [
+            Query.edge(qs[:64], qd[:64]),
+            Query.in_flow(qs[:64]),
+            Query.reach(qs[:16], qd[:16]),
+        ]
+    )
+    subs = [
+        fleet.tenant(t).subscribe(workload, every=args.every, name=f"tenant-{t}")
+        for t in range(min(3, args.tenants))
+    ]
+
+    for lo in range(0, args.edges, args.batch):
+        hi = min(args.edges, lo + args.batch)
+        fleet.ingest_mixed(
+            ids[lo:hi],
+            data["src"][lo:hi],
+            data["dst"][lo:hi],
+            data["weight"][lo:hi],
+        )
+
+    stats = fleet.summary()
+    print("[serve-fleet] " + " ".join(f"{k}={v:,.1f}" for k, v in stats.items()))
+    print(
+        f"[serve-fleet] ingest compiles={fleet._ingest._cache_size()} "
+        f"dispatches={fleet._ingest.dispatches} "
+        f"subs={[s.ticks for s in subs]} ticks"
     )
 
 

@@ -44,86 +44,154 @@ class SketchServer:
         query_backend: str = "auto",
         double_buffer: bool = True,
         max_inflight: int = 2,
+        tenants: Optional[int] = None,
+        checkpoint_dir: Optional[str] = None,
     ):
-        self.stream = GraphStream(
-            config,
-            seed=seed,
-            window_slices=window_slices,
-            ingest_backend=ingest_backend,
-            query_backend=query_backend,
-            double_buffer=double_buffer,
-            max_inflight=max_inflight,
-        )
+        """``tenants=N`` opens the server in MULTI-SESSION (fleet) mode:
+        one :class:`repro.fleet.SketchFleet` with N resident slots serves
+        every tenant through single stacked device dispatches; per-family
+        endpoints then take a required ``tenant=`` id, :meth:`tenant`
+        exposes the per-tenant session surface, and :meth:`ingest_mixed`
+        is the mixed-stream hot path.  ``checkpoint_dir`` enables LRU
+        eviction of cold tenants to host shards (and, single-session mode,
+        plain session checkpointing)."""
+        if tenants is not None:
+            from repro.fleet import SketchFleet
+
+            self.fleet: Optional["SketchFleet"] = SketchFleet.open(
+                config,
+                capacity=tenants,
+                seed=seed,
+                window_slices=window_slices,
+                checkpoint_dir=checkpoint_dir,
+                max_inflight=max_inflight,
+            )
+            self.stream = None
+        else:
+            self.fleet = None
+            self.stream = GraphStream(
+                config,
+                seed=seed,
+                window_slices=window_slices,
+                ingest_backend=ingest_backend,
+                query_backend=query_backend,
+                double_buffer=double_buffer,
+                max_inflight=max_inflight,
+                checkpoint_dir=checkpoint_dir,
+            )
+
+    def _session(self, tenant=None):
+        """The session a request addresses: the single stream, or the
+        tenant's fleet session (fleet mode requires ``tenant=``)."""
+        if self.fleet is None:
+            if tenant is not None:
+                raise ValueError(
+                    "tenant= requires a fleet server (tenants=N)"
+                )
+            return self.stream
+        if tenant is None:
+            raise ValueError(
+                "this server runs in fleet mode: pass tenant= (or use "
+                ".tenant(tid) / .ingest_mixed(...))"
+            )
+        return self.fleet.tenant(tenant)
+
+    # -- multi-session (fleet) surface ----------------------------------------
+
+    def tenant(self, tenant_id):
+        """The tenant's session handle (fleet mode only)."""
+        if self.fleet is None:
+            raise ValueError("tenant() requires a fleet server (tenants=N)")
+        return self.fleet.tenant(tenant_id)
+
+    def ingest_mixed(self, tenant_ids, src, dst, weights=None):
+        """One mixed multi-tenant arrival batch -> one device dispatch
+        (fleet mode only)."""
+        if self.fleet is None:
+            raise ValueError(
+                "ingest_mixed() requires a fleet server (tenants=N)"
+            )
+        return self.fleet.ingest_mixed(tenant_ids, src, dst, weights)
 
     @property
     def stats(self):
-        return self.stream.stats
+        return self.stream.stats if self.fleet is None else self.fleet.stats
 
     @property
     def engine(self):
-        return self.stream.engine
+        return self.stream.engine if self.fleet is None else self.fleet.engine
 
     # -- ingest ---------------------------------------------------------------
 
-    def ingest(self, src, dst, weights=None):
+    def ingest(self, src, dst, weights=None, tenant=None):
         """Dispatch one edge batch; returns as soon as the device accepts it
         (call :meth:`flush` / any query to synchronize)."""
-        self.stream.ingest(src, dst, weights)
+        self._session(tenant).ingest(src, dst, weights)
 
     def flush(self):
         """Block until every dispatched ingest batch has landed on device."""
-        self.stream.flush()
+        (self.stream if self.fleet is None else self.fleet).flush()
 
     def summary(self) -> Dict[str, float]:
         """Flushed stats — the only honest read of ingest throughput while
         ingest is double-buffered."""
-        return self.stream.summary()
+        return (self.stream if self.fleet is None else self.fleet).summary()
 
-    def advance_window(self):
-        self.stream.advance_window()
+    def advance_window(self, tenant=None):
+        self._session(tenant).advance_window()
 
     # -- per-family service endpoints -----------------------------------------
 
-    def edge_frequency(self, src, dst):
-        return self.stream.edge_frequency(src, dst)
+    def edge_frequency(self, src, dst, tenant=None):
+        return self._session(tenant).edge_frequency(src, dst)
 
-    def in_flow(self, keys):
-        return self.stream.in_flow(keys)
+    def in_flow(self, keys, tenant=None):
+        return self._session(tenant).in_flow(keys)
 
-    def out_flow(self, keys):
-        return self.stream.out_flow(keys)
+    def out_flow(self, keys, tenant=None):
+        return self._session(tenant).out_flow(keys)
 
-    def heavy_hitters(self, keys, theta: float):
-        return self.stream.heavy_hitters(keys, theta)
+    def heavy_hitters(self, keys, theta: float, tenant=None):
+        return self._session(tenant).heavy_hitters(keys, theta)
 
-    def reachable(self, src, dst):
-        return self.stream.reachable(src, dst)
+    def reachable(self, src, dst, tenant=None):
+        return self._session(tenant).reachable(src, dst)
 
-    def subgraph_weight(self, src, dst):
-        return self.stream.subgraph_weight(src, dst)
+    def subgraph_weight(self, src, dst, tenant=None):
+        return self._session(tenant).subgraph_weight(src, dst)
 
-    def query(self, *queries):
+    def query(self, *queries, tenant=None):
         """Heterogeneous mixed-family batches, planned and fused — the
         service endpoint for callers that speak the typed IR directly."""
-        return self.stream.query(*queries)
+        return self._session(tenant).query(*queries)
 
     # -- standing subscriptions -----------------------------------------------
 
-    def subscribe(self, *queries, **kwargs) -> Subscription:
+    def subscribe(self, *queries, tenant=None, **kwargs) -> Subscription:
         """Register a standing query batch (compiled once, re-evaluated
         after every ``every``-th ingest/window mutation) — the endpoint a
         request router binds long-lived client subscriptions to.  See
         :meth:`repro.api.GraphStream.subscribe`."""
-        return self.stream.subscribe(*queries, **kwargs)
+        return self._session(tenant).subscribe(*queries, **kwargs)
 
     def monitor(self, src, dst, weights, watch, theta: float) -> bool:
         """Threshold monitor (thin wrapper over a heavy-hitter
-        subscription; θ is a fraction of total stream weight)."""
+        subscription; θ is a fraction of total stream weight).
+        Single-session only — fleet callers register a per-tenant heavy
+        subscription via ``tenant(tid).subscribe(..., alarm=...)``."""
+        if self.fleet is not None:
+            raise ValueError(
+                "monitor() is single-session; use "
+                "tenant(tid).subscribe(..., alarm=...) on a fleet server"
+            )
         return self.stream.monitor(src, dst, weights, watch, theta)
 
-    def events(self) -> Iterator[SubscriptionEvent]:
-        """Drain the session-wide subscription event feed."""
-        return self.stream.events()
+    def events(self, tenant=None) -> Iterator[SubscriptionEvent]:
+        """Drain the subscription event feed — the whole fleet's when no
+        ``tenant`` is given on a fleet server."""
+        if self.fleet is not None and tenant is None:
+            return self.fleet.events()
+        return self._session(tenant).events()
 
     # intentionally re-exported so request routers can build IR objects
     Query = Query

@@ -1,0 +1,350 @@
+"""Fleet plane tests: per-tenant BIT-IDENTITY of a mixed-stream fleet to
+independent ``GraphStream`` sessions (ingest, delete, window advance,
+every query family, standing subscription ticks), the one-compile /
+one-dispatch-per-batch ingest contract at T=64, LRU eviction to
+checkpoint shards + fault-in, the stale-closure regression (cancel /
+evict must drop the slot's closure entry), and the SketchServer fleet
+mode."""
+import numpy as np
+import pytest
+
+from repro.api import GraphStream, Query, QueryBatch, SketchConfig
+from repro.fleet import FleetSketch, SketchFleet
+from repro.serve.engine import SketchServer
+
+CFG = SketchConfig(depth=2, width_rows=64, width_cols=64)
+SEED = 11
+
+
+def _open_session(**kw):
+    return GraphStream.open(
+        CFG, seed=SEED, ingest_backend="scatter", query_backend="jnp", **kw
+    )
+
+
+def _rand_batch(rng, n=32, nodes=500):
+    return (
+        rng.integers(0, nodes, n).astype(np.uint32),
+        rng.integers(0, nodes, n).astype(np.uint32),
+        rng.integers(1, 4, n).astype(np.float32),
+    )
+
+
+def _assert_value_equal(a, b, ctx=""):
+    if isinstance(a, tuple):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=ctx)
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=ctx)
+
+
+def _query_suite(rng, nodes=500):
+    qs = rng.integers(0, nodes, 12).astype(np.uint32)
+    qd = rng.integers(0, nodes, 12).astype(np.uint32)
+    return [
+        Query.edge(qs, qd),
+        Query.in_flow(qs),
+        Query.out_flow(qs),
+        Query.flow(qs),
+        Query.heavy(qs, 0.05),
+        Query.reach(qs, qd),
+        Query.subgraph(qs[:3], qd[:3]),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation: fleet == T independent sessions, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_matches_independent_sessions_every_family():
+    """Interleaved mixed stream with ingest/delete/window-advance per
+    tenant: counters AND all seven query families bit-match T independent
+    windowed GraphStream sessions, and a standing subscription ticks to
+    the same results."""
+    t_count = 4
+    rng = np.random.default_rng(0)
+    fleet = SketchFleet.open(CFG, capacity=t_count, seed=SEED, window_slices=3)
+    sessions = [_open_session(window_slices=3) for _ in range(t_count)]
+
+    # Standing subscription on tenant 0 in both worlds (every=2).
+    sub_q = QueryBatch([Query.in_flow(np.arange(8, dtype=np.uint32)),
+                        Query.reach(np.arange(4, dtype=np.uint32),
+                                    np.arange(4, 8, dtype=np.uint32))])
+    f_sub = fleet.tenant(0).subscribe(sub_q, every=2, name="t0")
+    s_sub = sessions[0].subscribe(sub_q, every=2, name="t0")
+
+    for step in range(6):
+        n = 120
+        ids = rng.integers(0, t_count, n)
+        src, dst, w = _rand_batch(rng, n)
+        fleet.ingest_mixed(ids, src, dst, w)
+        for t in range(t_count):
+            m = ids == t
+            if m.any():
+                sessions[t].ingest(src[m], dst[m], w[m])
+        if step == 2:
+            # turnstile delete on tenant 1
+            ds, dd, dw = _rand_batch(rng, 8)
+            fleet.tenant(1).delete(ds, dd, dw)
+            sessions[1].delete(ds, dd, dw)
+        if step == 3:
+            fleet.tenant(2).advance_window()
+            sessions[2].advance_window()
+
+    for t in range(t_count):
+        sk = sessions[t].sketch
+        fk = fleet.tenant(t).sketch
+        np.testing.assert_array_equal(
+            np.asarray(sk.counters), np.asarray(fk.counters)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sk.row_flows), np.asarray(fk.row_flows)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sk.col_flows), np.asarray(fk.col_flows)
+        )
+        assert fleet.tenant(t).epoch == sessions[t].epoch
+        for q in _query_suite(np.random.default_rng(5)):
+            a = sessions[t].query(q).value
+            b = fleet.tenant(t).query(q).value
+            _assert_value_equal(a, b, ctx=f"tenant {t} family {q.family}")
+
+    # Subscription ticks happened in lockstep with identical results.
+    f_events, s_events = f_sub.poll(), s_sub.poll()
+    assert f_sub.ticks == s_sub.ticks > 0
+    assert len(f_events) == len(s_events)
+    for fe, se in zip(f_events, s_events):
+        assert fe.tick == se.tick and fe.epoch == se.epoch
+        for fr, sr in zip(fe.results, se.results):
+            _assert_value_equal(fr.value, sr.value, ctx="subscription tick")
+
+
+def test_fleet_64_tenants_one_compile_one_dispatch_per_batch():
+    """The acceptance contract: 64 tenants, fixed-size mixed batches →
+    exactly 1 jit compile total and 1 device dispatch per batch, results
+    bit-identical per tenant to 64 independent sessions."""
+    t_count = 64
+    rng = np.random.default_rng(1)
+    fleet = SketchFleet.open(CFG, capacity=t_count, seed=SEED)
+    sessions = [_open_session() for _ in range(t_count)]
+    n_batches = 4
+    for _ in range(n_batches):
+        n = 1024
+        ids = rng.integers(0, t_count, n)
+        src, dst, w = _rand_batch(rng, n)
+        fleet.ingest_mixed(ids, src, dst, w)
+        for t in range(t_count):
+            m = ids == t
+            if m.any():
+                sessions[t].ingest(src[m], dst[m], w[m])
+    fleet.flush()
+    assert fleet._ingest.dispatches == n_batches
+    assert fleet._ingest._cache_size() == 1
+    for t in range(0, t_count, 7):
+        np.testing.assert_array_equal(
+            np.asarray(sessions[t].sketch.counters),
+            np.asarray(fleet.tenant(t).sketch.counters),
+        )
+
+
+def test_fleet_query_cache_stable_under_tenant_permutation():
+    """Permuting which tenants a query batch addresses reuses the same
+    traced signatures — the slot lane is data, not structure."""
+    rng = np.random.default_rng(2)
+    fleet = SketchFleet.open(CFG, capacity=8, seed=SEED)
+    ids = np.arange(8)
+    src, dst, w = _rand_batch(rng, 256)
+    fleet.ingest_mixed(np.repeat(ids, 32), src, dst, w)
+    qs = rng.integers(0, 500, 8).astype(np.uint32)
+    for t in range(8):
+        fleet.tenant(t).query(Query.in_flow(qs))
+    size_after_first = fleet.engine._cache_size()
+    for t in reversed(range(8)):
+        fleet.tenant(t).query(Query.in_flow(qs))
+    assert fleet.engine._cache_size() == size_after_first
+
+
+# ---------------------------------------------------------------------------
+# LRU residency: eviction to shards, fault-in, closure hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_eviction_faults_back_bit_identical(tmp_path):
+    rng = np.random.default_rng(3)
+    fleet = SketchFleet.open(
+        CFG, capacity=2, seed=SEED, checkpoint_dir=str(tmp_path)
+    )
+    ref = {}
+    for tid in ("a", "b", "c"):
+        src, dst, w = _rand_batch(rng, 64)
+        fleet.tenant(tid).ingest(src, dst, w)
+        ref[tid] = (src, dst, w)
+    # capacity 2 → "a" was evicted when "c" arrived
+    assert fleet.stats.evictions == 1
+    assert "a" not in fleet.resident_tenants
+    assert not fleet._sessions["a"].resident
+
+    oracle = _open_session()
+    oracle.ingest(*ref["a"])
+    # touching "a" faults it back in (evicting the coldest resident)
+    np.testing.assert_array_equal(
+        np.asarray(fleet.tenant("a").sketch.counters),
+        np.asarray(oracle.sketch.counters),
+    )
+    assert fleet.stats.fault_ins == 1
+    assert fleet.tenant("a").epoch == oracle.epoch
+    # queries keep answering correctly after the round trip
+    qs = rng.integers(0, 500, 6).astype(np.uint32)
+    _assert_value_equal(
+        oracle.query(Query.out_flow(qs)).value,
+        fleet.tenant("a").query(Query.out_flow(qs)).value,
+    )
+
+
+def test_fleet_over_capacity_without_checkpoint_dir_raises():
+    fleet = SketchFleet.open(CFG, capacity=1, seed=SEED)
+    fleet.tenant("a")
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        fleet.tenant("b")
+
+
+def test_evicted_then_readmitted_tenant_gets_fresh_closure(tmp_path):
+    """Regression (stale-closure fix): tenant A builds a closure at epoch
+    E, is evicted, another tenant B occupies the slot and reaches epoch E
+    too — B (and A after fault-in) must never see A's cached closure."""
+    rng = np.random.default_rng(4)
+    fleet = SketchFleet.open(
+        CFG, capacity=1, seed=SEED, checkpoint_dir=str(tmp_path)
+    )
+    # A: 1 ingest batch (epoch 1), then a reach query caches A's closure.
+    a_batch = _rand_batch(rng, 32)
+    fleet.tenant("A").ingest(*a_batch)
+    pair = (np.asarray([a_batch[0][0]]), np.asarray([a_batch[1][0]]))
+    assert bool(fleet.tenant("A").query(Query.reach(*pair)).value[0])
+    assert fleet.engine.closure_builds == 1
+
+    # B evicts A, ingests a DIFFERENT batch, lands on the same epoch 1.
+    b_batch = _rand_batch(rng, 32)
+    fleet.tenant("B").ingest(*b_batch)
+    assert fleet.tenant("B").epoch == 1
+    oracle_b = _open_session()
+    oracle_b.ingest(*b_batch)
+    _assert_value_equal(
+        oracle_b.query(Query.reach(*pair)).value,
+        fleet.tenant("B").query(Query.reach(*pair)).value,
+        ctx="B must not see A's closure at the colliding epoch",
+    )
+    assert fleet.engine.closure_builds == 2  # B built its own
+
+    # A faults back in (evicting B) at its checkpointed epoch 1: fresh build.
+    oracle_a = _open_session()
+    oracle_a.ingest(*a_batch)
+    _assert_value_equal(
+        oracle_a.query(Query.reach(*pair)).value,
+        fleet.tenant("A").query(Query.reach(*pair)).value,
+        ctx="A after fault-in must rebuild, not reuse B's closure",
+    )
+    assert fleet.engine.closure_builds == 3
+
+
+def test_cancel_reach_subscription_drops_slot_closure():
+    """Regression (stale-closure fix): ``Subscription.cancel()`` on a
+    reach-bearing plan drops the tenant slot's closure entry."""
+    rng = np.random.default_rng(5)
+    fleet = SketchFleet.open(CFG, capacity=2, seed=SEED)
+    sess = fleet.tenant("x")
+    sub = sess.subscribe(
+        Query.reach(np.asarray([1], np.uint32), np.asarray([2], np.uint32)),
+        every=1,
+    )
+    sess.ingest(*_rand_batch(rng, 16))
+    assert sub.ticks == 1
+    assert sess._slot in fleet.engine._closures
+    sub.cancel()
+    assert sess._slot not in fleet.engine._closures
+    # session close drops it too
+    sess.query(Query.reach(np.asarray([1], np.uint32), np.asarray([2], np.uint32)))
+    assert sess._slot in fleet.engine._closures
+    slot = sess._slot
+    sess.close()
+    assert slot not in fleet.engine._closures
+
+
+def test_session_unsubscribe_invalidates_closure_on_reach_cancel():
+    """The single-session twin of the fix: cancelling a reach subscription
+    invalidates the GraphStream engine's closure cache."""
+    rng = np.random.default_rng(6)
+    gs = _open_session()
+    sub = gs.subscribe(
+        Query.reach(np.asarray([1], np.uint32), np.asarray([2], np.uint32)),
+        every=1,
+    )
+    gs.ingest(*_rand_batch(rng, 16))
+    assert gs.engine._closure is not None
+    sub.cancel()
+    assert gs.engine._closure is None
+
+
+# ---------------------------------------------------------------------------
+# Subscription ticking economics on the fleet
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_subscription_incremental_closure_counts():
+    """Additions-only standing reach on one tenant: 1 full build on the
+    first tick, incremental refreshes after — same economics as the
+    single-session subscription plane."""
+    rng = np.random.default_rng(7)
+    fleet = SketchFleet.open(CFG, capacity=4, seed=SEED)
+    sess = fleet.tenant("t")
+    sess.subscribe(
+        Query.reach(
+            np.arange(4, dtype=np.uint32), np.arange(4, 8, dtype=np.uint32)
+        ),
+        every=1,
+    )
+    n_ticks = 4
+    for _ in range(n_ticks):
+        sess.ingest(*_rand_batch(rng, 8))
+    assert fleet.engine.closure_builds == 1
+    assert fleet.engine.closure_incremental_refreshes == n_ticks - 1
+
+
+# ---------------------------------------------------------------------------
+# SketchServer fleet mode
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_server_fleet_mode():
+    rng = np.random.default_rng(8)
+    srv = SketchServer(CFG, seed=SEED, tenants=4)
+    src, dst, w = _rand_batch(rng, 128)
+    ids = rng.integers(0, 4, 128)
+    srv.ingest_mixed(ids, src, dst, w)
+    srv.ingest(src[:8], dst[:8], w[:8], tenant=2)
+    oracle = _open_session()
+    m = ids == 2
+    oracle.ingest(src[m], dst[m], w[m])
+    oracle.ingest(src[:8], dst[:8], w[:8])
+    qs = rng.integers(0, 500, 5).astype(np.uint32)
+    np.testing.assert_array_equal(
+        srv.in_flow(qs, tenant=2), np.atleast_1d(oracle.query(Query.in_flow(qs)).value)
+    )
+    # fleet mode demands a tenant; single-session endpoints reject one
+    with pytest.raises(ValueError, match="fleet mode"):
+        srv.in_flow(qs)
+    single = SketchServer(CFG, seed=SEED)
+    with pytest.raises(ValueError, match="fleet server"):
+        single.in_flow(qs, tenant=0)
+
+
+def test_fleet_sketch_shares_session_hash_family():
+    fleet_state = FleetSketch.empty(CFG, 3, __import__("jax").random.key(SEED))
+    gs = _open_session()
+    np.testing.assert_array_equal(
+        np.asarray(fleet_state.row_hash.a), np.asarray(gs.sketch.row_hash.a)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fleet_state.row_hash.b), np.asarray(gs.sketch.row_hash.b)
+    )
