@@ -91,15 +91,17 @@ def fleet_flow(state: FleetSketch, slots, keys):
     return fleet_out_flow(state, slots, keys)
 
 
-def fleet_stream_totals(state: FleetSketch):
-    """Per-tenant F̃ (T,) — min over d of each tenant's row-flow mass.
-    Register-served: reduces the (T, K, d, w_r) register, never counters."""
-    return jnp.min(jnp.sum(state.row_flows, axis=(1, 3)), axis=1)
+def fleet_stream_totals(state: FleetSketch, slots):
+    """Per-query F̃ (Q,) — min over d of the queried tenant's row-flow mass.
+    Register-served, and the slot gather comes FIRST: the reduction runs on
+    the (Q, K, d, w_r) gathered rows, so the cost scales with the query
+    chunk, never a T-wide scan of the fleet stack."""
+    return jnp.min(jnp.sum(state.row_flows[slots], axis=(1, 3)), axis=1)
 
 
 def fleet_heavy_rel_vec(state: FleetSketch, slots, keys, thetas):
     """Relative-θ heavy check against the QUERY'S OWN tenant total F̃."""
-    cut = thetas.astype(jnp.float32) * fleet_stream_totals(state)[slots].astype(
+    cut = thetas.astype(jnp.float32) * fleet_stream_totals(state, slots).astype(
         jnp.float32
     )
     return (

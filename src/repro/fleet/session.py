@@ -552,7 +552,10 @@ class SketchFleet:
         a per-edge sequence.  The stream is segment-grouped by resident
         slot on the host (stable — per-tenant arrival order is preserved),
         padded to a power-of-two bucket, and scattered into the stack.
-        Returns ``{tenant_id: IngestReceipt}``."""
+        A batch spanning more distinct tenants than the fleet has slots is
+        split into capacity-sized tenant groups, one dispatch per group, so
+        LRU admission can never evict a tenant an in-flight group still
+        routes to.  Returns ``{tenant_id: IngestReceipt}``."""
         t0 = time.time()
         s_np = np.atleast_1d(encode_labels(src))
         d_np = np.atleast_1d(encode_labels(dst))
@@ -564,36 +567,82 @@ class SketchFleet:
         w_np = (
             np.ones(n_edges, np.float32)
             if weights is None
-            else np.asarray(weights, np.float32)
+            else np.atleast_1d(np.asarray(weights, np.float32))
         )
+        if w_np.shape != (n_edges,):
+            raise ValueError(
+                f"weights/src shape mismatch: {w_np.shape} vs {(n_edges,)}"
+            )
         additive = weights is None or not bool(np.any(w_np < 0))
 
         if isinstance(tenant_ids, (str, bytes, int, np.integer)):
             sess = self.tenant(tenant_ids)
             slot_np = np.full(n_edges, sess._slot, np.int32)
-            segments = [(sess, 0, n_edges)]
-        else:
-            ids = np.asarray(tenant_ids)
-            if ids.shape[0] != n_edges:
-                raise ValueError(
-                    f"tenant_ids/src shape mismatch: {ids.shape[0]} vs {n_edges}"
-                )
-            uniq_ids, inverse = np.unique(ids, return_inverse=True)
-            # Admission (and any eviction/fault-in) happens BEFORE the slot
-            # lane is built, so every edge routes to a live slot.
-            sessions = [self.tenant(t) for t in uniq_ids.tolist()]
-            slot_np = np.asarray(
-                [s._slot for s in sessions], np.int32
-            )[inverse]
-            slot_np, s_np, d_np, w_np, uniq_slots, starts, counts = group_stream(
-                slot_np, s_np, d_np, w_np
+            return self._dispatch_group(
+                [(sess, 0, n_edges)], slot_np, s_np, d_np, w_np, additive, t0
             )
-            by_slot = {s._slot: s for s in sessions}
-            segments = [
-                (by_slot[int(sl)], int(st), int(ct))
-                for sl, st, ct in zip(uniq_slots, starts, counts)
-            ]
+        ids = np.asarray(tenant_ids)
+        if ids.shape[0] != n_edges:
+            raise ValueError(
+                f"tenant_ids/src shape mismatch: {ids.shape[0]} vs {n_edges}"
+            )
+        uniq_ids, inverse = np.unique(ids, return_inverse=True)
+        if uniq_ids.shape[0] <= self.capacity:
+            return self._route_group(
+                uniq_ids, inverse, s_np, d_np, w_np, additive, t0
+            )
+        # More distinct tenants than slots: admitted one at a time, this
+        # batch's own tenants would evict each other before the slot lane
+        # is built.  Split into groups of at most `capacity` tenants —
+        # each group is fully admitted, routed, and dispatched before the
+        # next group's admissions may evict it.
+        receipts: Dict = {}
+        for lo in range(0, uniq_ids.shape[0], self.capacity):
+            hi = min(lo + self.capacity, uniq_ids.shape[0])
+            pick = (inverse >= lo) & (inverse < hi)
+            receipts.update(
+                self._route_group(
+                    uniq_ids[lo:hi],
+                    inverse[pick] - lo,
+                    s_np[pick],
+                    d_np[pick],
+                    w_np[pick],
+                    additive,
+                    time.time(),
+                )
+            )
+        return receipts
 
+    def _route_group(
+        self, uniq_ids, inverse, s_np, d_np, w_np, additive, t0
+    ) -> Dict:
+        """Admit one group of at most ``capacity`` distinct tenants and
+        dispatch its edges.  The cap guarantees the admission loop cannot
+        evict a group member once touched (every touch rewarms the LRU and
+        at most ``capacity - k`` evictions remain after the k-th touch), so
+        every edge routes to a live slot."""
+        sessions = [self.tenant(t) for t in uniq_ids.tolist()]
+        slot_np = np.asarray(
+            [s._slot for s in sessions], np.int32
+        )[inverse]
+        slot_np, s_np, d_np, w_np, uniq_slots, starts, counts = group_stream(
+            slot_np, s_np, d_np, w_np
+        )
+        by_slot = {s._slot: s for s in sessions}
+        segments = [
+            (by_slot[int(sl)], int(st), int(ct))
+            for sl, st, ct in zip(uniq_slots, starts, counts)
+        ]
+        return self._dispatch_group(
+            segments, slot_np, s_np, d_np, w_np, additive, t0
+        )
+
+    def _dispatch_group(
+        self, segments, slot_np, s_np, d_np, w_np, additive, t0
+    ) -> Dict:
+        """One grouped, padded, donated device dispatch + its bookkeeping
+        (touched-key deltas, receipts, stats, subscription ticks)."""
+        n_edges = int(s_np.shape[0])
         # Per-tenant touched-key deltas (feeds each tenant's incremental
         # closure refresh) — only while that tenant's tracking is live.
         deltas: Dict[int, Optional[np.ndarray]] = {}
@@ -670,8 +719,13 @@ class SketchFleet:
                     for sess in reach_sessions.values()
                 ],
             )
+        # The shared closure sync is charged evenly; each subscription then
+        # pays for its own replay only (per-iteration clock, so a late
+        # subscription never re-counts an earlier one's elapsed time).
+        sync_s = (time.time() - t0) / len(due)
         now = time.time()
         for sess, sub in due:
+            t1 = time.time()
             results = sub.plan.run(sess._view, self._state, epoch=sess._epoch)
             event = SubscriptionEvent(
                 subscription_id=sub.id,
@@ -688,7 +742,7 @@ class SketchFleet:
             sess.stats.subscription_ticks += 1
             self.stats.subscription_ticks += 1
             sess._count_served(results)
-            sess.stats.query_s += (time.time() - t0) / len(due)
+            sess.stats.query_s += sync_s + (time.time() - t1)
 
     # -- introspection ---------------------------------------------------------
 

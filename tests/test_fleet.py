@@ -209,6 +209,52 @@ def test_fleet_over_capacity_without_checkpoint_dir_raises():
         fleet.tenant("b")
 
 
+def test_fleet_mixed_batch_more_tenants_than_capacity(tmp_path):
+    """Regression: one mixed batch spanning more distinct tenants than the
+    fleet has slots must not evict a batch member mid-route (which left its
+    slot ``None`` and crashed the slot-lane build).  The batch is split
+    into capacity-sized tenant groups, and per-tenant state stays
+    bit-identical to independent sessions through the evict/fault-in
+    churn."""
+    t_count, cap = 5, 2
+    rng = np.random.default_rng(9)
+    fleet = SketchFleet.open(
+        CFG, capacity=cap, seed=SEED, checkpoint_dir=str(tmp_path)
+    )
+    sessions = [_open_session() for _ in range(t_count)]
+    for _ in range(2):
+        n = 100
+        ids = rng.integers(0, t_count, n)
+        src, dst, w = _rand_batch(rng, n)
+        receipts = fleet.ingest_mixed(ids, src, dst, w)
+        assert set(receipts) == set(np.unique(ids).tolist())
+        assert sum(r.n_edges for r in receipts.values()) == n
+        for t in range(t_count):
+            m = ids == t
+            if m.any():
+                sessions[t].ingest(src[m], dst[m], w[m])
+    assert len(fleet.resident_tenants) == cap
+    assert fleet.stats.evictions > 0
+    for t in range(t_count):
+        np.testing.assert_array_equal(
+            np.asarray(sessions[t].sketch.counters),
+            np.asarray(fleet.tenant(t).sketch.counters),
+            err_msg=f"tenant {t}",
+        )
+        assert fleet.tenant(t).epoch == sessions[t].epoch
+
+
+def test_fleet_ingest_weights_length_mismatch_raises():
+    fleet = SketchFleet.open(CFG, capacity=2, seed=SEED)
+    src = np.arange(4, dtype=np.uint32)
+    with pytest.raises(ValueError, match="weights"):
+        fleet.ingest_mixed("a", src, src, np.ones(3, np.float32))
+    with pytest.raises(ValueError, match="weights"):
+        fleet.ingest_mixed(
+            np.zeros(4, np.int64), src, src, np.ones(6, np.float32)
+        )
+
+
 def test_evicted_then_readmitted_tenant_gets_fresh_closure(tmp_path):
     """Regression (stale-closure fix): tenant A builds a closure at epoch
     E, is evicted, another tenant B occupies the slot and reaches epoch E
