@@ -1,0 +1,33 @@
+"""Compiled-cost rows — the costlint measurements beside the wall-clock
+rows, so the trajectory files track WHAT the compiler was asked to do
+(flops/edge, bytes/edge, fitted exponents) alongside how fast it ran.
+A cheap subset of the cost registry: one ingest boundary, one
+register-served family, one closure refresh — enough to spot a scaling
+regression in the history without re-paying the full 37-compile sweep.
+"""
+from __future__ import annotations
+
+from benchmarks.common import record
+
+_SUBSET = (
+    "cost.ingest.jit_boundary",
+    "cost.query.in_flow",
+    "cost.query.closure_refresh",
+)
+
+
+def run():
+    from repro.analysis.contracts import COST_ENTRY_POINTS
+    from repro.analysis.costlint import measure_entry
+
+    for ep in COST_ENTRY_POINTS:
+        if ep.name not in _SUBSET:
+            continue
+        m = measure_entry(ep)
+        derived = {
+            f"exp_{f['axis']}": f["measured"] for f in m["axes"]
+        }
+        derived["peak_bytes"] = m["peak_bytes"]
+        if "bytes_per_edge" in m:
+            derived["bytes_per_edge"] = round(m["bytes_per_edge"], 1)
+        record(ep.name.replace(".", "_"), 0.0, **derived)

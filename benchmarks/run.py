@@ -1,20 +1,66 @@
 """Benchmark harness — one section per validatable paper claim (the paper
 has no experimental tables; Thm 1, Lemma 5.2, Sections 3.2/4.3/4.4/6.1.2 are
 the claims).  Prints ``name,us_per_call,derived`` CSV rows, writes
-results/benchmarks.json (all sections), and writes the query-plane rows to
-BENCH_queries.json and the ingest-plane rows (per-backend edges/sec) to
-BENCH_ingest.json at the REPO ROOT — the perf-trajectory files tracking
-queries/sec per family, the subscription ticks/sec figure, and ingest
-edges/sec per backend across PRs.
+results/benchmarks.json (all sections), and APPENDS this run's query-plane
+and ingest-plane rows to BENCH_queries.json / BENCH_ingest.json at the
+REPO ROOT as ``{pr, commit, rows}`` history records — the perf-trajectory
+files tracking queries/sec per family, the subscription ticks/sec figure,
+and ingest edges/sec per backend ACROSS PRs, not just the latest run.
+Legacy flat-list files are absorbed as a single seed record.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _commit_id() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def append_history(path: Path, rows, *, pr=None, commit=None) -> list:
+    """Append this run's rows to ``path`` as a ``{pr, commit, rows}``
+    record, keeping every prior record.  A legacy flat list of rows (the
+    pre-history format) becomes the first record with ``pr: 0``.  The PR
+    number comes from $BENCH_PR when set, else one past the last record's.
+    Re-running under the same PR number replaces that record instead of
+    duplicating it."""
+    history = []
+    if path.exists():
+        prior = json.loads(path.read_text())
+        if prior and isinstance(prior[0], dict) and "rows" in prior[0]:
+            history = prior
+        elif prior:
+            history = [{"pr": 0, "commit": "legacy", "rows": prior}]
+    if pr is None:
+        env_pr = os.environ.get("BENCH_PR")
+        pr = (
+            int(env_pr)
+            if env_pr
+            else (history[-1]["pr"] + 1 if history else 1)
+        )
+    record = {
+        "pr": int(pr),
+        "commit": commit if commit is not None else _commit_id(),
+        "rows": rows,
+    }
+    history = [h for h in history if h["pr"] != record["pr"]] + [record]
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return history
 
 
 def main() -> None:
@@ -22,6 +68,7 @@ def main() -> None:
     from benchmarks import (
         bench_accuracy,
         bench_compression,
+        bench_cost,
         bench_ingest,
         bench_kernels,
         bench_queries,
@@ -36,6 +83,7 @@ def main() -> None:
         ("ingest (Section 3.2 constraints)", bench_ingest.run),
         ("compression (sketched all-reduce)", bench_compression.run),
         ("kernels (pallas vs ref)", bench_kernels.run),
+        ("cost (compiled flops/bytes + fitted exponents)", bench_cost.run),
     ):
         name, fn = section
         print(f"# --- {name} ---")
@@ -46,14 +94,17 @@ def main() -> None:
     out.mkdir(exist_ok=True)
     (out / "benchmarks.json").write_text(json.dumps(ROWS, indent=1))
     # The query-plane trajectory lives at the repo root so successive PRs
-    # leave a comparable perf record (ticks/sec, qps per family).
+    # leave a comparable perf record (ticks/sec, qps per family).  The
+    # cost rows ride with the queries section: same cadence, same file.
     bench_q = REPO_ROOT / "BENCH_queries.json"
-    bench_q.write_text(json.dumps(section_rows.get("queries", []), indent=1))
+    append_history(
+        bench_q, section_rows.get("queries", []) + section_rows.get("cost", [])
+    )
     # Same for the ingest plane: the per-backend edges/sec sweep rows
     # (ingest_backend_{scatter,onehot,pallas}) seed the trajectory the
     # ROADMAP's tens-of-millions-of-edges/sec push is measured against.
     bench_i = REPO_ROOT / "BENCH_ingest.json"
-    bench_i.write_text(json.dumps(section_rows.get("ingest", []), indent=1))
+    append_history(bench_i, section_rows.get("ingest", []))
     print(
         f"# done: {len(ROWS)} rows in {time.time()-t0:.1f}s -> "
         f"results/benchmarks.json + {bench_q} + {bench_i}"

@@ -1,13 +1,14 @@
 """repro.analysis — the static-analysis plane enforcing hot-path contracts.
 
-Two passes, one CLI (``python -m repro.analysis``):
+Three passes, one CLI (``python -m repro.analysis``):
 
 - **Pass 1, jaxpr contract checker** (:mod:`repro.analysis.jaxpr_lint` +
   :mod:`repro.analysis.contracts`): traces a registry of engine entry
   points (every ``IngestEngine`` backend, every ``QueryEngine`` family,
   ``refresh_closure``, the subscription tick, each ``kernels/*/ops.py``
-  wrapper, the distributed plane) and checks declarative contracts on the
-  traced jaxprs — no host callbacks, no wide-dtype promotion, no
+  wrapper, the distributed plane, the turnstile-delete and
+  window-advance session boundaries) and checks declarative contracts on
+  the traced jaxprs — no host callbacks, no wide-dtype promotion, no
   full-counter reduction for register-served families, buffer donation
   applied through the jit boundary, collectives only under ``shard_map``,
   and at most one trace per family per shape signature.
@@ -17,18 +18,39 @@ Two passes, one CLI (``python -m repro.analysis``):
   loops in hot modules, ``REPRO_*`` env reads only at dispatch
   boundaries, and every Pallas kernel keeps a registered ref +
   bit-equality test.
+- **Pass 3, costlint** (:mod:`repro.analysis.costlint` + the cost
+  registry in :mod:`repro.analysis.contracts`): lowers-and-compiles each
+  cost entry point at 2–3 geometrically spaced sizes, pulls XLA's
+  ``cost_analysis()`` / ``memory_analysis()``, fits per-axis scaling
+  exponents, and machine-checks the paper's complexity claims — ingest
+  O(B·d) and O(1) in tenants, register-served queries O(d·Q) independent
+  of width, closure refresh O(T_touched·w²) — plus the memory-side
+  donation proof and the absolute ceilings committed in
+  ``ANALYSIS_BUDGETS.json`` (ratcheted via ``--update-budgets``).
 
 Pre-existing violations are either fixed or explicitly baselined with a
-one-line justification in :mod:`repro.analysis.baseline`; the CLI exits
-nonzero on any NEW (unbaselined) violation.  DESIGN.md Section 9 has the
-architecture and the full contract table.
+one-line justification in ``baseline.json`` (prunable via
+``--prune-baseline``); the CLI exits nonzero on any NEW (unbaselined)
+violation.  DESIGN.md Sections 9 and 12 have the architecture and the
+full contract tables.
 """
 from repro.analysis.contracts import (  # noqa: F401
+    COST_ENTRY_POINTS,
+    AxisContract,
+    CostEntryPoint,
+    CostProbe,
     ENTRY_POINTS,
     EntryPoint,
     TracedEntry,
     Violation,
     apply_baseline,
+)
+from repro.analysis.costlint import (  # noqa: F401
+    budgets_from_measurements,
+    cost_table_markdown,
+    load_budgets,
+    measure_entry,
+    run_cost_pass,
 )
 from repro.analysis.jaxpr_lint import (  # noqa: F401
     reduces_full_counters,

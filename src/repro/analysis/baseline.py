@@ -1,41 +1,106 @@
 """Accepted pre-existing violations, each with a one-line justification.
 
-Keyed ``(rule, subject)`` — subjects use the same spelling the passes
-emit (``path::scope:lineno`` for source findings, the entry-point name
-for jaxpr findings).  A baselined finding still appears in the report
+The baseline lives in ``baseline.json`` next to this module so the CLI
+can prune it programmatically (``--prune-baseline``).  Entries are keyed
+``(rule, subject)`` — subjects use the same spelling the passes emit
+(``path::scope:lineno`` for source findings, the entry-point name for
+jaxpr/cost findings).  A baselined finding still appears in the report
 (marked ``baselined``) but does not fail the CLI; REMOVE the entry when
 the underlying code is fixed, so the gate starts protecting it.
 
 Line numbers in subjects make baselines brittle on purpose: moving the
-code re-surfaces the finding for re-review.
+code re-surfaces the finding for re-review.  The staleness check runs
+the other direction — an entry whose pass ran but which matched no
+current violation is dead weight (the code was fixed, or the subject
+moved) and is flagged / prunable.
+
+Context for the committed entries: the seven ``direct-jit`` kernel sites
+are module-scope ``@functools.partial(jax.jit, ...)`` decorators on
+fixed-shape Pallas wrappers — one decorator site per kernel, traced once
+per (shape, interpret) signature; these ARE the kernel plane's cache
+modules.  The ``jnp-in-loop`` site is ``_run_padded``'s host-side chunk
+loop, which bounds the number of distinct padded shapes the jit cache
+ever sees (DESIGN.md Section 5); ``jnp.pad`` there stages the next
+dispatch's operand, it is not traced work.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import json
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-BASELINE: Dict[Tuple[str, str], str] = {
-    # Module-scope @functools.partial(jax.jit, ...) on the fixed-shape
-    # Pallas wrappers: one decorator site per kernel, traced once per
-    # (shape, interpret) signature — these ARE the kernel plane's cache
-    # modules, there is no per-family cache to fragment.
-    ("direct-jit", "kernels/closure/kernel.py::closure_step_pallas:41"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/flow/kernel.py::flows_pallas:38"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/countsketch/kernel.py::countsketch_pallas:46"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/query/kernel.py::multi_query_pallas:98"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/query/kernel.py::query_pallas:121"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/ingest/kernel.py::ingest_pallas:58"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    ("direct-jit", "kernels/ingest_fused/kernel.py::fused_ingest_pallas:97"):
-        "module-scope jit of a fixed-shape Pallas wrapper (kernel-plane cache site)",
-    # _run_padded's chunk loop runs on the HOST between jit dispatches by
-    # design: it bounds the number of distinct padded shapes the jit cache
-    # ever sees (DESIGN.md Section 5); jnp.pad here prepares the next
-    # dispatch's operand, it is not traced work.
-    ("jnp-in-loop", "core/query_engine.py::_run_padded:179"):
-        "host-side chunk loop; jnp.pad stages the next bounded-shape dispatch",
+BASELINE_PATH = pathlib.Path(__file__).with_name("baseline.json")
+
+# Which pass emits which rule — staleness is only decidable for rules
+# whose pass actually ran this invocation.
+RULE_PASS: Dict[str, str] = {
+    # source pass
+    "direct-jit": "source",
+    "host-sync": "source",
+    "jnp-in-loop": "source",
+    "env-read": "source",
+    "kernel-ref": "source",
+    # jaxpr pass
+    "no-host-callback": "jaxpr",
+    "no-wide-dtype": "jaxpr",
+    "no-counter-reduction": "jaxpr",
+    "collectives-under-shard-map": "jaxpr",
+    "donation-applied": "jaxpr",
+    "retrace": "jaxpr",
+    "entry-point-broken": "jaxpr",
+    # costlint pass
+    "cost-exponent": "costlint",
+    "cost-donation-memory": "costlint",
+    "cost-budget": "costlint",
+    "cost-entry-broken": "costlint",
 }
+
+
+def load_baseline(
+    path: Optional[pathlib.Path] = None,
+) -> Dict[Tuple[str, str], str]:
+    p = pathlib.Path(path) if path is not None else BASELINE_PATH
+    if not p.exists():
+        return {}
+    return {
+        (e["rule"], e["subject"]): e["justification"]
+        for e in json.loads(p.read_text())
+    }
+
+
+BASELINE: Dict[Tuple[str, str], str] = load_baseline()
+
+
+def stale_baseline_entries(
+    baseline: Dict[Tuple[str, str], str],
+    violations: Iterable,
+    passes: Sequence[str],
+) -> List[Tuple[str, str]]:
+    """Baseline keys whose rule's pass ran this invocation but which
+    matched no violation (baselined or not) — the accepted debt no longer
+    exists, so the entry should be deleted before it masks a new finding
+    at the same site."""
+    seen = {(v.rule, v.subject) for v in violations}
+    return [
+        key
+        for key in baseline
+        if RULE_PASS.get(key[0]) in passes and key not in seen
+    ]
+
+
+def prune_baseline(
+    stale: Sequence[Tuple[str, str]],
+    path: Optional[pathlib.Path] = None,
+) -> int:
+    """Delete ``stale`` keys from the baseline file; returns the number of
+    entries removed."""
+    p = pathlib.Path(path) if path is not None else BASELINE_PATH
+    if not p.exists() or not stale:
+        return 0
+    dead = set(stale)
+    entries = json.loads(p.read_text())
+    kept = [e for e in entries if (e["rule"], e["subject"]) not in dead]
+    removed = len(entries) - len(kept)
+    if removed:
+        p.write_text(json.dumps(kept, indent=1) + "\n")
+    return removed

@@ -253,6 +253,32 @@ def _fused_update_entry() -> TracedEntry:
     )
 
 
+def _delete_jit_boundary() -> TracedEntry:
+    """The turnstile-delete session boundary (paper Section 6.1.1) — the
+    SAME donated jit the additive path uses, traced with negative weights,
+    so a delete-specific regression (say, a re-derive of the flow registers
+    by full reduction) cannot hide from the contracts."""
+    from repro.api.stream import GraphStream
+
+    jit_fn, args, shape = GraphStream.cost_probe_update(
+        width=_FIXTURE_WIDTH, depth=_FIXTURE_DEPTH, batch=8, negative=True
+    )
+    return TracedEntry(fn=jit_fn, args=args, counters_shape=shape, jit_fn=jit_fn)
+
+
+def _advance_window_boundary() -> TracedEntry:
+    """The sliding-window advance boundary: donated ring expiry.  The
+    counter shape here is the whole (K, d, w_r, w_c) ring — advance must
+    stay pure data movement (zero the expiring slice in place), never a
+    whole-ring reduction to re-derive the flow registers."""
+    from repro.api.stream import GraphStream
+
+    jit_fn, args, shape = GraphStream.cost_probe_advance(
+        width=_FIXTURE_WIDTH, depth=_FIXTURE_DEPTH, slices=4
+    )
+    return TracedEntry(fn=jit_fn, args=args, counters_shape=shape, jit_fn=jit_fn)
+
+
 def _query_entry(family: str) -> Callable[[], TracedEntry]:
     def build():
         import jax.numpy as jnp
@@ -513,6 +539,17 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
         _preagg_jit_boundary,
     ),
     EntryPoint("ingest.fused_update", HOT, _fused_update_entry),
+    # -- the session boundaries that used to escape the registry -----------
+    EntryPoint(
+        "ingest.delete_boundary",
+        REGISTER_SERVED + ("donation-applied",),
+        _delete_jit_boundary,
+    ),
+    EntryPoint(
+        "window.advance_boundary",
+        REGISTER_SERVED + ("donation-applied",),
+        _advance_window_boundary,
+    ),
     # -- every QueryEngine family -----------------------------------------
     EntryPoint("query.edge", HOT, _query_entry("edge")),
     EntryPoint("query.edge.pallas", HOT, _query_entry("edge.pallas")),
@@ -577,6 +614,244 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
         "fleet.query.closure_refresh",
         HOT,
         _fleet_query_entry("closure_refresh"),
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# pass 3: compiled-cost contracts (costlint)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisContract:
+    """Declared scaling ceiling along ONE problem-size axis: the log-log
+    least-squares slope of ``metric`` over the geometric ``sizes`` ladder
+    must stay within ``exponent + tol``.
+
+    ``metric`` defaults to "flops" because XLA's "bytes accessed" counts
+    whole-operand reads — the register planes and the fleet stack are read
+    as operands, so bytes grow with w and T even for genuinely O(d·Q) /
+    O(1)-in-T programs.  Flops is the clean per-query work signal; declare
+    ``metric="bytes"`` only where traffic itself is the claim."""
+
+    axis: str                   # "B" | "Q" | "T" | "w" | "S"
+    exponent: float             # declared upper-bound exponent
+    sizes: Tuple[int, ...]      # geometrically spaced probe sizes
+    tol: float = 0.35
+    metric: str = "flops"       # "flops" | "bytes"
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProbe:
+    """What one cost entry point hands the compiler at ONE size point: a
+    traceable ``fn`` + ``args`` (``jit_fn`` when the callable is already a
+    donated session boundary) plus the sketch-state bytes at this size —
+    the donation memory proof compares alias/temp bytes against it."""
+
+    fn: Callable
+    args: Tuple
+    jit_fn: Optional[Callable] = None
+    state_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEntryPoint:
+    """One compiled-cost contract.  ``build(**sizes)`` instantiates the
+    probe at a size point (kwargs are the axis names); costlint compiles
+    every point on each axis's ladder (the base point — every axis at its
+    smallest size — is shared), pulls ``cost_analysis()`` +
+    ``memory_analysis()``, fits per-axis exponents, and checks them against
+    the declared ceilings, the donation memory proof (``donated=True``),
+    and the committed absolute budgets (``ANALYSIS_BUDGETS.json``).
+    ``edges_axis`` names the axis whose largest point normalizes the
+    bytes-accessed budget to bytes/edge."""
+
+    name: str
+    axes: Tuple[AxisContract, ...]
+    build: Callable[..., CostProbe]
+    donated: bool = False
+    edges_axis: Optional[str] = None
+
+
+def _counters_nbytes(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return 4 * n  # float32 counters
+
+
+def _cost_ingest_scatter(B: int = 64, w: int = 64) -> CostProbe:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ingest import ingest
+    from repro.core.sketch import GLavaSketch, SketchConfig
+
+    cfg = SketchConfig(depth=_FIXTURE_DEPTH, width_rows=w, width_cols=w)
+    sk = GLavaSketch.empty(cfg, jax.random.key(0))
+    src = jnp.arange(B, dtype=jnp.uint32)
+    dst = src + jnp.uint32(B)
+    rows, cols = sk.hash_edges(src, dst)
+    wts = jnp.ones(B, jnp.float32)
+    return CostProbe(
+        fn=lambda c, r, cc, ww: ingest(c, r, cc, ww, backend="scatter"),
+        args=(sk.counters, rows, cols, wts),
+        state_bytes=_counters_nbytes(tuple(sk.counters.shape)),
+    )
+
+
+def _cost_ingest_boundary(B: int = 64, w: int = 64) -> CostProbe:
+    from repro.api.stream import GraphStream
+
+    jit_fn, args, shape = GraphStream.cost_probe_update(
+        width=w, depth=_FIXTURE_DEPTH, batch=B
+    )
+    return CostProbe(
+        fn=jit_fn, args=args, jit_fn=jit_fn,
+        state_bytes=_counters_nbytes(shape),
+    )
+
+
+def _cost_fleet_ingest_boundary(
+    B: int = 64, T: int = 2, w: int = 64
+) -> CostProbe:
+    from repro.fleet.ingest import FleetIngestEngine
+
+    jit_fn, args, shape = FleetIngestEngine.cost_probe(
+        tenants=T, width=w, depth=_FIXTURE_DEPTH, batch=B
+    )
+    return CostProbe(
+        fn=jit_fn, args=args, jit_fn=jit_fn,
+        state_bytes=_counters_nbytes(shape),
+    )
+
+
+def _cost_query(family: str) -> Callable[..., CostProbe]:
+    def build(Q: int = 32, w: int = 64) -> CostProbe:
+        from repro.core.query_engine import QueryEngine
+
+        fn, args, shape = QueryEngine.family_probe(
+            family, width=w, depth=_FIXTURE_DEPTH, n_queries=Q
+        )
+        return CostProbe(
+            fn=fn, args=args, state_bytes=_counters_nbytes(shape)
+        )
+
+    return build
+
+
+def _cost_closure(family: str) -> Callable[..., CostProbe]:
+    def build(w: int = 64) -> CostProbe:
+        from repro.core.query_engine import QueryEngine
+
+        fn, args, shape = QueryEngine.family_probe(
+            family, width=w, depth=_FIXTURE_DEPTH
+        )
+        return CostProbe(
+            fn=fn, args=args, state_bytes=_counters_nbytes(shape)
+        )
+
+    return build
+
+
+def _cost_fleet_query(family: str) -> Callable[..., CostProbe]:
+    def build(
+        Q: int = 32, T: int = 2, w: int = 64, S: int = 2
+    ) -> CostProbe:
+        from repro.fleet.query import FleetQueryEngine
+
+        fn, args, shape = FleetQueryEngine.family_probe(
+            family,
+            tenants=T,
+            width=w,
+            depth=_FIXTURE_DEPTH,
+            n_queries=Q,
+            touched=S,
+        )
+        return CostProbe(
+            fn=fn, args=args, state_bytes=_counters_nbytes(shape)
+        )
+
+    return build
+
+
+_B3 = (64, 128, 256)
+_Q2 = (32, 128)
+_T3 = (2, 4, 8)
+_T2 = (2, 8)
+_W2 = (32, 128)
+_W3 = (32, 64, 128)
+_S2 = (2, 8)
+
+COST_ENTRY_POINTS: Tuple[CostEntryPoint, ...] = (
+    # Paper Thm 1 / Section 3.2: maintenance is O(B·d) per batch and free
+    # of the width — the hash + scatter never touch w-many cells.
+    CostEntryPoint(
+        "cost.ingest.scatter",
+        (AxisContract("B", 1.0, _B3), AxisContract("w", 0.0, _W2)),
+        _cost_ingest_scatter,
+        edges_axis="B",
+    ),
+    CostEntryPoint(
+        "cost.ingest.jit_boundary",
+        (AxisContract("B", 1.0, _B3),),
+        _cost_ingest_boundary,
+        donated=True,
+        edges_axis="B",
+    ),
+    # Fleet arrivals: the tenant axis rides the scatter INDEX, so T tenants
+    # cost O(1) in T — the invariant PR 8's review had to catch by hand.
+    CostEntryPoint(
+        "cost.fleet.ingest_boundary",
+        (AxisContract("B", 1.0, _B3), AxisContract("T", 0.0, _T3)),
+        _cost_fleet_ingest_boundary,
+        donated=True,
+        edges_axis="B",
+    ),
+    # Register-served query families: O(d·Q) gathers, exponent ≈ 0 in w.
+    CostEntryPoint(
+        "cost.query.edge",
+        (AxisContract("Q", 1.0, _Q2), AxisContract("w", 0.0, _W2)),
+        _cost_query("edge"),
+    ),
+    CostEntryPoint(
+        "cost.query.in_flow",
+        (AxisContract("Q", 1.0, _Q2), AxisContract("w", 0.0, _W2)),
+        _cost_query("in_flow"),
+    ),
+    CostEntryPoint(
+        "cost.query.heavy_rel_vec",
+        (AxisContract("Q", 1.0, _Q2), AxisContract("w", 0.0, _W2)),
+        _cost_query("heavy_rel_vec"),
+    ),
+    # Fleet query families: the slot is a DATA lane — exponent ≈ 0 in T.
+    CostEntryPoint(
+        "cost.fleet.query.in_flow",
+        (AxisContract("Q", 1.0, _Q2), AxisContract("T", 0.0, _T2)),
+        _cost_fleet_query("in_flow"),
+    ),
+    CostEntryPoint(
+        "cost.fleet.query.heavy_rel_vec",
+        (AxisContract("Q", 1.0, _Q2), AxisContract("T", 0.0, _T2)),
+        _cost_fleet_query("heavy_rel_vec"),
+    ),
+    # Closure maintenance: the touched-row refresh is O(T_touched·w²); only
+    # the full rebuild may pay O(w³ log w).
+    CostEntryPoint(
+        "cost.query.closure_refresh",
+        (AxisContract("w", 2.0, _W3, tol=0.4),),
+        _cost_closure("closure_refresh"),
+    ),
+    CostEntryPoint(
+        "cost.query.closure",
+        (AxisContract("w", 3.0, _W3, tol=0.5),),
+        _cost_closure("closure"),
+    ),
+    CostEntryPoint(
+        "cost.fleet.closure_refresh",
+        (AxisContract("w", 2.0, _W3, tol=0.4), AxisContract("S", 1.0, _S2)),
+        _cost_fleet_query("closure_refresh"),
     ),
 )
 

@@ -1,0 +1,412 @@
+"""costlint — pass 3: compiled-cost & scaling-law contracts.
+
+The paper's headline guarantees are asymptotic: constant maintenance
+cost per edge update, O(d·Q) query evaluation, O(T_touched·w²) closure
+refresh.  tracelint (passes 1–2) checks the *structure* of the traced
+programs; this pass checks the *compiled cost curves*.  For every
+:class:`~repro.analysis.contracts.CostEntryPoint` it lowers-and-compiles
+the probe at 2–3 geometrically spaced sizes per axis (batch B, queries Q,
+tenants T, width w, touched-stack S), pulls XLA's ``cost_analysis()``
+(flops, bytes accessed) and ``memory_analysis()`` (argument/temp/alias
+bytes) per point via the shared :mod:`repro.roofline.analysis` plumbing,
+fits per-axis log-log exponents, and emits violations when
+
+- ``cost-exponent``        a fitted exponent exceeds its declared ceiling
+                           (+tol) — a silent O(B²) ingest or T-wide scan;
+- ``cost-donation-memory`` a donated boundary stops aliasing the sketch
+                           state or allocates a full-sketch temp — the
+                           memory-side proof of donation, complementing
+                           the ``donation-applied`` aliasing check;
+- ``cost-budget``          an absolute ceiling from the committed
+                           ``ANALYSIS_BUDGETS.json`` regresses (peak
+                           compiled bytes, bytes accessed per edge, total
+                           compile count), with a human-readable diff.
+
+Budgets ratchet: ``python -m repro.analysis --update-budgets`` re-measures
+and rewrites the ceilings at ``measured × margin``; the file is committed
+so CI fails on regressions, not on noise.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.contracts import (
+    COST_ENTRY_POINTS,
+    CostEntryPoint,
+    Violation,
+)
+
+# Headroom multiplier applied by --update-budgets: ceilings absorb
+# XLA-version jitter without hiding a real (≥25%) regression.
+BUDGET_MARGIN = 1.25
+
+# src/repro/analysis/costlint.py -> repo root
+DEFAULT_BUDGETS_PATH = (
+    pathlib.Path(__file__).resolve().parents[3] / "ANALYSIS_BUDGETS.json"
+)
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _fit_exponent(sizes: Sequence[int], values: Sequence[float]) -> float:
+    """Log-log least-squares slope; values clip at 1 so an all-zero metric
+    (e.g. flops of a pure-copy program) fits exponent 0, not -inf."""
+    import numpy as np
+
+    xs = np.log(np.asarray(sizes, dtype=float))
+    ys = np.log(np.maximum(np.asarray(values, dtype=float), 1.0))
+    if xs.size < 2:
+        return 0.0
+    return float(np.polyfit(xs, ys, 1)[0])
+
+
+def _compile_point(entry: CostEntryPoint, sizes: Dict[str, int]) -> Dict:
+    import jax
+
+    from repro.roofline.analysis import (
+        compiled_cost_dict,
+        compiled_memory_dict,
+    )
+
+    probe = entry.build(**sizes)
+    jf = probe.jit_fn if probe.jit_fn is not None else jax.jit(probe.fn)
+    compiled = jf.lower(*probe.args).compile()
+    cost = compiled_cost_dict(compiled)
+    return {
+        "sizes": dict(sizes),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "memory": compiled_memory_dict(compiled) or {},
+        "state_bytes": int(probe.state_bytes),
+    }
+
+
+def measure_entry(entry: CostEntryPoint) -> Dict:
+    """Compile ``entry`` at every point of every axis ladder (the base
+    point — each axis at its smallest size — is compiled once and shared)
+    and fit the per-axis exponents.  Returns the measurement record the
+    report/budget/table layers consume."""
+    base = {a.axis: a.sizes[0] for a in entry.axes}
+
+    def key(sizes: Dict[str, int]) -> Tuple:
+        return tuple(sorted(sizes.items()))
+
+    points: Dict[Tuple, Dict] = {}
+    for ax in entry.axes:
+        for s in ax.sizes:
+            sizes = dict(base, **{ax.axis: s})
+            if key(sizes) not in points:
+                points[key(sizes)] = _compile_point(entry, sizes)
+
+    fits = []
+    for ax in entry.axes:
+        values = [
+            points[key(dict(base, **{ax.axis: s}))][ax.metric]
+            for s in ax.sizes
+        ]
+        measured = _fit_exponent(ax.sizes, values)
+        fits.append(
+            {
+                "axis": ax.axis,
+                "metric": ax.metric,
+                "declared": ax.exponent,
+                "tol": ax.tol,
+                "measured": round(measured, 3),
+                "sizes": list(ax.sizes),
+                "values": values,
+                "ok": measured <= ax.exponent + ax.tol,
+            }
+        )
+
+    base_point = points[key(base)]
+    peak = max(
+        (p["memory"].get("peak_bytes_per_device_est", 0) for p in points.values()),
+        default=0,
+    )
+    meas = {
+        "entry": entry.name,
+        "donated": entry.donated,
+        "axes": fits,
+        "compiles": len(points),
+        "peak_bytes": int(peak),
+        "base_memory": base_point["memory"],
+        "state_bytes": base_point["state_bytes"],
+    }
+    if entry.edges_axis is not None:
+        ax = next(a for a in entry.axes if a.axis == entry.edges_axis)
+        big = points[key(dict(base, **{ax.axis: ax.sizes[-1]}))]
+        meas["edges_at_max"] = int(ax.sizes[-1])
+        meas["bytes_per_edge"] = big["bytes"] / float(ax.sizes[-1])
+    return meas
+
+
+# ---------------------------------------------------------------------------
+# contract checks
+# ---------------------------------------------------------------------------
+
+
+def _exponent_violations(meas: Dict) -> List[Violation]:
+    out = []
+    for fit in meas["axes"]:
+        if fit["ok"]:
+            continue
+        vals = ", ".join(f"{v:.4g}" for v in fit["values"])
+        out.append(
+            Violation(
+                rule="cost-exponent",
+                subject=f"{meas['entry']}[{fit['axis']}]",
+                message=(
+                    f"measured {fit['metric']} exponent {fit['measured']:.2f} "
+                    f"over {fit['axis']} ∈ {fit['sizes']} exceeds declared "
+                    f"O(n^{fit['declared']:g}) + {fit['tol']:g} tol "
+                    f"({fit['metric']}: {vals})"
+                ),
+                pass_name="costlint",
+            )
+        )
+    return out
+
+
+def _donation_violations(meas: Dict) -> List[Violation]:
+    """Memory-side donation proof at the base point: the compiled boundary
+    must alias at least the sketch-state bytes into its outputs AND must
+    not stage a full-sketch temp — either failure means XLA re-allocates
+    the summary per batch even though the jaxpr-side aliasing annotation
+    looks fine."""
+    if not meas["donated"] or not meas["base_memory"]:
+        return []
+    state = meas["state_bytes"]
+    alias = meas["base_memory"].get("alias_size_in_bytes", 0)
+    temp = meas["base_memory"].get("temp_size_in_bytes", 0)
+    out = []
+    if alias < state:
+        out.append(
+            Violation(
+                rule="cost-donation-memory",
+                subject=meas["entry"],
+                message=(
+                    f"donated boundary aliases only {alias} bytes "
+                    f"(< {state} sketch-state bytes): donation dropped, the "
+                    "compiled program re-allocates the summary per batch"
+                ),
+                pass_name="costlint",
+            )
+        )
+    if temp >= state:
+        out.append(
+            Violation(
+                rule="cost-donation-memory",
+                subject=meas["entry"],
+                message=(
+                    f"donated boundary allocates {temp} temp bytes "
+                    f"(>= {state} sketch-state bytes): a full-sketch copy "
+                    "escaped donation into scratch memory"
+                ),
+                pass_name="costlint",
+            )
+        )
+    return out
+
+
+def _budget_violations(
+    measurements: List[Dict],
+    budgets: Optional[Dict],
+    full_registry: bool,
+) -> List[Violation]:
+    if budgets is None:
+        return [
+            Violation(
+                rule="cost-budget",
+                subject="ANALYSIS_BUDGETS.json",
+                message=(
+                    "no committed budgets file — run `python -m "
+                    "repro.analysis --update-budgets` and commit the result"
+                ),
+                pass_name="costlint",
+            )
+        ]
+    out = []
+    entries = budgets.get("entries", {})
+    for m in measurements:
+        b = entries.get(m["entry"])
+        if b is None:
+            out.append(
+                Violation(
+                    rule="cost-budget",
+                    subject=m["entry"],
+                    message=(
+                        "no committed ceiling for this entry — run "
+                        "--update-budgets and commit ANALYSIS_BUDGETS.json"
+                    ),
+                    pass_name="costlint",
+                )
+            )
+            continue
+        ceil = b.get("peak_bytes")
+        if ceil and m["peak_bytes"] > ceil:
+            out.append(
+                Violation(
+                    rule="cost-budget",
+                    subject=m["entry"],
+                    message=(
+                        f"compiled peak memory {m['peak_bytes']} B exceeds "
+                        f"committed ceiling {ceil} B "
+                        f"(+{(m['peak_bytes'] / ceil - 1) * 100:.0f}%)"
+                    ),
+                    pass_name="costlint",
+                )
+            )
+        bpe_ceil = b.get("bytes_per_edge")
+        if bpe_ceil and m.get("bytes_per_edge", 0.0) > bpe_ceil:
+            out.append(
+                Violation(
+                    rule="cost-budget",
+                    subject=m["entry"],
+                    message=(
+                        f"{m['bytes_per_edge']:.1f} bytes accessed per edge "
+                        f"exceeds committed ceiling {bpe_ceil:.1f} "
+                        f"(+{(m['bytes_per_edge'] / bpe_ceil - 1) * 100:.0f}%)"
+                    ),
+                    pass_name="costlint",
+                )
+            )
+    cc_ceil = budgets.get("compile_count")
+    total = sum(m["compiles"] for m in measurements)
+    if full_registry and cc_ceil and total > cc_ceil:
+        out.append(
+            Violation(
+                rule="cost-budget",
+                subject="costlint.compile_count",
+                message=(
+                    f"{total} compiles across the cost registry exceeds the "
+                    f"committed ceiling {cc_ceil} — a new entry or size "
+                    "ladder landed without --update-budgets"
+                ),
+                pass_name="costlint",
+            )
+        )
+    return out
+
+
+def run_cost_pass(
+    entry_points: Optional[Sequence[CostEntryPoint]] = None,
+    *,
+    budgets: Optional[Dict] = None,
+    check_budgets: bool = True,
+    full_registry: Optional[bool] = None,
+) -> Tuple[List[Violation], List[Dict]]:
+    """Measure every cost entry point and check all three contract classes.
+    Returns ``(violations, measurements)``.  ``check_budgets=False`` skips
+    the absolute-ceiling class (fixture tests, --update-budgets runs)."""
+    if full_registry is None:
+        full_registry = entry_points is None
+    eps = COST_ENTRY_POINTS if entry_points is None else tuple(entry_points)
+    violations: List[Violation] = []
+    measurements: List[Dict] = []
+    for ep in eps:
+        try:
+            meas = measure_entry(ep)
+        except Exception as e:  # noqa: BLE001 — a broken probe IS a finding
+            violations.append(
+                Violation(
+                    rule="cost-entry-broken",
+                    subject=ep.name,
+                    message=f"cost probe failed to build/compile: {e!r}",
+                    pass_name="costlint",
+                )
+            )
+            continue
+        measurements.append(meas)
+        violations.extend(_exponent_violations(meas))
+        violations.extend(_donation_violations(meas))
+    if check_budgets:
+        violations.extend(
+            _budget_violations(measurements, budgets, full_registry)
+        )
+    return violations, measurements
+
+
+# ---------------------------------------------------------------------------
+# budgets: load / ratchet
+# ---------------------------------------------------------------------------
+
+
+def load_budgets(path: Optional[pathlib.Path] = None) -> Optional[Dict]:
+    p = pathlib.Path(path) if path is not None else DEFAULT_BUDGETS_PATH
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def budgets_from_measurements(
+    measurements: List[Dict],
+    *,
+    margin: float = BUDGET_MARGIN,
+    prior: Optional[Dict] = None,
+    full_registry: bool = True,
+) -> Dict:
+    """The ratchet: ceilings at measured × margin.  Entries not measured
+    this run (a --cost-entries filter) keep their prior ceilings; the
+    compile-count ceiling only moves on full-registry runs."""
+    entries = dict((prior or {}).get("entries", {}))
+    for m in measurements:
+        e = {"peak_bytes": int(math.ceil(m["peak_bytes"] * margin))}
+        if "bytes_per_edge" in m:
+            e["bytes_per_edge"] = round(m["bytes_per_edge"] * margin, 1)
+        entries[m["entry"]] = e
+    compile_count = (
+        sum(m["compiles"] for m in measurements)
+        if full_registry
+        else (prior or {}).get("compile_count")
+    )
+    out = {"margin": margin, "entries": dict(sorted(entries.items()))}
+    if compile_count is not None:
+        out["compile_count"] = compile_count
+    return out
+
+
+def write_budgets(budgets: Dict, path: Optional[pathlib.Path] = None) -> pathlib.Path:
+    p = pathlib.Path(path) if path is not None else DEFAULT_BUDGETS_PATH
+    p.write_text(json.dumps(budgets, indent=1, sort_keys=True) + "\n")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the cost table (CI job summary / report artifact)
+# ---------------------------------------------------------------------------
+
+
+def cost_table_markdown(measurements: List[Dict]) -> str:
+    """Entry point → declared complexity → measured exponents, as a GitHub
+    markdown table (posted into the CI job summary)."""
+    lines = [
+        "| entry point | axis | metric | declared | measured | sizes | ok |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for m in measurements:
+        for fit in m["axes"]:
+            sizes = "×".join(str(s) for s in fit["sizes"])
+            lines.append(
+                f"| {m['entry']} | {fit['axis']} | {fit['metric']} "
+                f"| O(n^{fit['declared']:g})+{fit['tol']:g} "
+                f"| {fit['measured']:.2f} | {sizes} "
+                f"| {'✓' if fit['ok'] else '✗'} |"
+            )
+    lines.append("")
+    for m in measurements:
+        extra = (
+            f", {m['bytes_per_edge']:.1f} B/edge @ {m['edges_at_max']} edges"
+            if "bytes_per_edge" in m
+            else ""
+        )
+        lines.append(
+            f"- `{m['entry']}`: {m['compiles']} compiles, "
+            f"peak {m['peak_bytes']} B{extra}"
+        )
+    return "\n".join(lines) + "\n"

@@ -1,8 +1,15 @@
 """CLI + report assembly for ``python -m repro.analysis``.
 
-Runs the jaxpr contract pass and the AST source pass, folds in the
-baseline, and renders a text or JSON report.  Exit status is 0 iff there
-are zero UNBASELINED violations — the CI gate.
+Runs the jaxpr contract pass, the AST source pass, and the compiled-cost
+pass (costlint), folds in the baseline, and renders a text or JSON
+report.  Exit status is 0 iff there are zero UNBASELINED violations —
+the CI gate.  Stale baseline entries (their pass ran, no violation
+matched) are surfaced as warnings and removable via ``--prune-baseline``.
+
+Budget maintenance: ``--update-budgets`` re-measures the cost registry
+and rewrites ``ANALYSIS_BUDGETS.json`` ceilings at measured × margin
+(the ratchet); ``--cost-table PATH`` writes the exponent table as
+markdown for the CI job summary.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ from typing import Dict, Iterable, List, Optional
 
 from repro.analysis.contracts import Violation, apply_baseline
 
-_PASSES = ("jaxpr", "source")
+_PASSES = ("jaxpr", "source", "costlint")
 
 
 def _default_root() -> pathlib.Path:
@@ -34,12 +41,15 @@ def run_analysis(
     root: Optional[pathlib.Path] = None,
     tests_dir: Optional[pathlib.Path] = None,
     entry_points=None,
+    cost_entry_points=None,
+    budgets_path: Optional[pathlib.Path] = None,
+    check_budgets: bool = True,
     baseline: Optional[Dict] = None,
 ) -> Dict:
     """Run the requested passes and return the report dict:
-    ``{ok, counts, checked_entry_points, violations: [...]}``.  ``ok`` is
-    True iff no unbaselined violation survived."""
-    from repro.analysis.baseline import BASELINE
+    ``{ok, counts, checked_entry_points, cost, violations: [...]}``.
+    ``ok`` is True iff no unbaselined violation survived."""
+    from repro.analysis.baseline import BASELINE, stale_baseline_entries
 
     passes = tuple(passes)
     root = pathlib.Path(root) if root is not None else _default_root()
@@ -50,6 +60,8 @@ def run_analysis(
 
     violations: List[Violation] = []
     checked: List[str] = []
+    cost_checked: List[str] = []
+    measurements: List[Dict] = []
     if "jaxpr" in passes:
         from repro.analysis.contracts import ENTRY_POINTS
         from repro.analysis.jaxpr_lint import run_jaxpr_pass
@@ -63,7 +75,24 @@ def run_analysis(
         from repro.analysis.source_lint import lint_tree
 
         violations.extend(lint_tree(root, tests_dir))
+    if "costlint" in passes:
+        from repro.analysis.contracts import COST_ENTRY_POINTS
+        from repro.analysis.costlint import load_budgets, run_cost_pass
 
+        ceps = (
+            COST_ENTRY_POINTS
+            if cost_entry_points is None
+            else tuple(cost_entry_points)
+        )
+        cost_checked = [ep.name for ep in ceps]
+        cost_violations, measurements = run_cost_pass(
+            None if cost_entry_points is None else ceps,
+            budgets=load_budgets(budgets_path),
+            check_budgets=check_budgets,
+        )
+        violations.extend(cost_violations)
+
+    stale = stale_baseline_entries(baseline, violations, passes)
     violations = apply_baseline(violations, baseline)
     new = [v for v in violations if not v.baselined]
     old = [v for v in violations if v.baselined]
@@ -72,11 +101,16 @@ def run_analysis(
         "passes": list(passes),
         "root": str(root),
         "checked_entry_points": checked,
+        "checked_cost_entries": cost_checked,
         "counts": {
             "violations": len(new),
             "baselined": len(old),
             "entry_points": len(checked),
+            "cost_entry_points": len(cost_checked),
+            "stale_baseline": len(stale),
         },
+        "stale_baseline": [list(k) for k in stale],
+        "cost": measurements,
         "violations": [v.to_json() for v in violations],
     }
 
@@ -85,10 +119,27 @@ def _render_text(report: Dict) -> str:
     lines = []
     for v in report["violations"]:
         lines.append(Violation(**v).render())
+    for rule, subject in report.get("stale_baseline", []):
+        lines.append(
+            f"WARN stale baseline entry ({rule}, {subject}) matched no "
+            "current violation — remove it or run --prune-baseline"
+        )
+    for m in report.get("cost", []):
+        fits = ", ".join(
+            f"{f['axis']}:{f['measured']:.2f}/{f['declared']:g}"
+            f"{'' if f['ok'] else '!'}"
+            for f in m["axes"]
+        )
+        lines.append(
+            f"cost {m['entry']}: {fits} ({m['compiles']} compiles, "
+            f"peak {m['peak_bytes']} B)"
+        )
     c = report["counts"]
     lines.append(
         f"repro.analysis: {c['entry_points']} entry points, "
-        f"{c['violations']} violation(s), {c['baselined']} baselined"
+        f"{c.get('cost_entry_points', 0)} cost entries, "
+        f"{c['violations']} violation(s), {c['baselined']} baselined, "
+        f"{c.get('stale_baseline', 0)} stale baseline"
     )
     lines.append("OK" if report["ok"] else "FAIL")
     return "\n".join(lines)
@@ -97,7 +148,10 @@ def _render_text(report: Dict) -> str:
 def main(argv: Optional[List[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="Hot-path contract checks: jaxpr pass + source lint.",
+        description=(
+            "Hot-path contract checks: jaxpr pass + source lint + "
+            "compiled-cost contracts (costlint)."
+        ),
     )
     parser.add_argument(
         "--format", choices=("text", "json"), default="text",
@@ -109,7 +163,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     parser.add_argument(
         "--passes", default=",".join(_PASSES),
-        help="comma-separated subset of passes: jaxpr,source",
+        help="comma-separated subset of passes: jaxpr,source,costlint",
     )
     parser.add_argument(
         "--root", type=pathlib.Path, default=None,
@@ -119,6 +173,36 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--tests-dir", type=pathlib.Path, default=None,
         help="tests directory for the kernel-ref coverage rule",
     )
+    parser.add_argument(
+        "--budgets", type=pathlib.Path, default=None,
+        help="path to ANALYSIS_BUDGETS.json (default: repo root)",
+    )
+    parser.add_argument(
+        "--update-budgets", action="store_true",
+        help=(
+            "re-measure the cost registry and rewrite the budgets file at "
+            "measured x margin (the ratchet), then exit 0"
+        ),
+    )
+    parser.add_argument(
+        "--prune-baseline", action="store_true",
+        help=(
+            "run the requested passes, delete baseline entries that match "
+            "no current violation, and exit 0"
+        ),
+    )
+    parser.add_argument(
+        "--baseline", type=pathlib.Path, default=None,
+        help="path to baseline.json (default: the committed one)",
+    )
+    parser.add_argument(
+        "--cost-entries", default=None,
+        help="comma-separated cost entry names to restrict costlint to",
+    )
+    parser.add_argument(
+        "--cost-table", type=pathlib.Path, default=None,
+        help="write the cost exponent table (markdown) to this path",
+    )
     args = parser.parse_args(argv)
 
     passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
@@ -126,7 +210,71 @@ def main(argv: Optional[List[str]] = None) -> int:
     if unknown:
         parser.error(f"unknown pass(es): {', '.join(unknown)}")
 
-    report = run_analysis(passes, root=args.root, tests_dir=args.tests_dir)
+    cost_entry_points = None
+    if args.cost_entries is not None:
+        from repro.analysis.contracts import COST_ENTRY_POINTS
+
+        wanted = {n.strip() for n in args.cost_entries.split(",") if n.strip()}
+        cost_entry_points = tuple(
+            ep for ep in COST_ENTRY_POINTS if ep.name in wanted
+        )
+        missing = wanted - {ep.name for ep in cost_entry_points}
+        if missing:
+            parser.error(f"unknown cost entries: {', '.join(sorted(missing))}")
+
+    if args.update_budgets:
+        from repro.analysis.costlint import (
+            budgets_from_measurements,
+            load_budgets,
+            run_cost_pass,
+            write_budgets,
+        )
+
+        full = cost_entry_points is None
+        violations, measurements = run_cost_pass(
+            cost_entry_points, check_budgets=False
+        )
+        budgets = budgets_from_measurements(
+            measurements,
+            prior=load_budgets(args.budgets),
+            full_registry=full,
+        )
+        path = write_budgets(budgets, args.budgets)
+        print(
+            f"wrote {path}: {len(budgets['entries'])} entry ceilings, "
+            f"compile_count={budgets.get('compile_count')}"
+        )
+        for v in violations:
+            print(v.render(), file=sys.stderr)
+        return 0
+
+    baseline = None
+    if args.baseline is not None:
+        from repro.analysis.baseline import load_baseline
+
+        baseline = load_baseline(args.baseline)
+
+    report = run_analysis(
+        passes,
+        root=args.root,
+        tests_dir=args.tests_dir,
+        cost_entry_points=cost_entry_points,
+        budgets_path=args.budgets,
+        baseline=baseline,
+    )
+
+    if args.prune_baseline:
+        from repro.analysis.baseline import prune_baseline
+
+        stale = [tuple(k) for k in report["stale_baseline"]]
+        removed = prune_baseline(stale, args.baseline)
+        print(f"pruned {removed} stale baseline entr{'y' if removed == 1 else 'ies'}")
+        return 0
+
+    if args.cost_table is not None and report.get("cost"):
+        from repro.analysis.costlint import cost_table_markdown
+
+        args.cost_table.write_text(cost_table_markdown(report["cost"]))
 
     if args.output is not None:
         args.output.write_text(json.dumps(report, indent=2) + "\n")

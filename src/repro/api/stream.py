@@ -267,6 +267,22 @@ class GraphStream:
         # (pad_bucket) so variable collapse sizes cost a bounded trace
         # ladder, not a retrace per batch.
         self._jit_update_pre = jax.jit(_update_pre, donate_argnums=0)
+
+        # Window expiry boundary: advancing the ring is pure data movement
+        # over the (K, d, w_r, w_c) slices, so donating the window lets XLA
+        # zero the expiring slice in place instead of copying the whole
+        # ring per advance — the same dedup-dispatch shape as _jit_update.
+        if self._window is not None:
+
+            def _advance(uniq):
+                live = jax.tree_util.tree_unflatten(
+                    treedef, [uniq[j] for j in slots]
+                )
+                return jax.tree_util.tree_leaves(live.advance())
+
+            self._jit_advance = jax.jit(_advance, donate_argnums=0)
+        else:
+            self._jit_advance = None
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -298,6 +314,50 @@ class GraphStream:
         elif not isinstance(config, SketchConfig):
             raise TypeError(f"config must be SketchConfig or preset name, got {config!r}")
         return cls(config, **kwargs)
+
+    # -- costlint sizing hooks -------------------------------------------------
+
+    @classmethod
+    def cost_probe_update(
+        cls,
+        *,
+        width: int = 64,
+        depth: int = 2,
+        batch: int = 64,
+        negative: bool = False,
+    ):
+        """The REAL donated ingest jit boundary instantiated at a
+        parameterized (w, d, B) — the sizing hook costlint compiles at a
+        geometric size ladder to fit scaling exponents.  ``negative=True``
+        probes the turnstile-delete path (same boundary, negative weights).
+        Returns ``(jit_fn, args, counters_shape)``."""
+        gs = cls.open(
+            SketchConfig(depth=depth, width_rows=width, width_cols=width),
+            ingest_backend="scatter",
+            query_backend="jnp",
+        )
+        leaves = jax.tree_util.tree_leaves(gs._sketch)
+        uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
+        src = jnp.arange(batch, dtype=jnp.uint32)
+        dst = src + jnp.uint32(batch)
+        w = jnp.full((batch,), -1.0 if negative else 1.0, jnp.float32)
+        return gs._jit_update, (uniq, src, dst, w), tuple(gs._sketch.counters.shape)
+
+    @classmethod
+    def cost_probe_advance(
+        cls, *, width: int = 64, depth: int = 2, slices: int = 4
+    ):
+        """The donated window-advance boundary at a parameterized (w, d, K).
+        Returns ``(jit_fn, args, slices_shape)``."""
+        gs = cls.open(
+            SketchConfig(depth=depth, width_rows=width, width_cols=width),
+            window_slices=slices,
+            ingest_backend="scatter",
+            query_backend="jnp",
+        )
+        leaves = jax.tree_util.tree_leaves(gs._window)
+        uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
+        return gs._jit_advance, (uniq,), tuple(gs._window.slices.shape)
 
     # -- state ---------------------------------------------------------------
 
@@ -733,7 +793,12 @@ class GraphStream:
         reachability closure rebuilds from scratch on next use."""
         if self._window is not None:
             self.flush()
-            self._window = self._window.advance()
+            leaves = jax.tree_util.tree_leaves(self._window)
+            uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
+            new_leaves = self._jit_advance(uniq)
+            self._window = jax.tree_util.tree_unflatten(
+                self._live_treedef, new_leaves
+            )
             self._epoch += 1
             self._note_touched(None)
             self._after_mutation()

@@ -153,6 +153,41 @@ class QueryEngine:
             self._jits[family] = fn
         return fn
 
+    @staticmethod
+    def family_probe(
+        family: str,
+        *,
+        width: int = 64,
+        depth: int = 2,
+        n_queries: int = 32,
+    ):
+        """Costlint sizing hook: the family's jnp estimator + args built at
+        a parameterized (w, d, Q), so the cost pass can compile the same
+        callable the engine jit-caches across a geometric size ladder.
+        Returns ``(fn, args, counters_shape)``."""
+        from repro.core import reach
+        from repro.core.sketch import GLavaSketch, SketchConfig
+
+        cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+        sk = GLavaSketch.empty(cfg, jax.random.key(0))
+        keys = jnp.arange(n_queries, dtype=jnp.uint32)
+        shape = tuple(sk.counters.shape)
+        jnp_fn = _FAMILIES[family][0]
+        if family == "edge":
+            return jnp_fn, (sk, keys, keys + jnp.uint32(1)), shape
+        if family in ("in_flow", "out_flow", "flow"):
+            return jnp_fn, (sk, keys), shape
+        if family in ("heavy_vec", "heavy_rel_vec"):
+            thetas = jnp.full((n_queries,), 0.5, jnp.float32)
+            return jnp_fn, (sk, keys, thetas), shape
+        if family == "closure":
+            return jnp_fn, (sk.counters,), shape
+        if family == "closure_refresh":
+            closure = reach.transitive_closure(sk.counters)
+            rows = sk.row_hash(keys[: min(8, n_queries)])
+            return jnp_fn, (closure, sk.counters, rows), shape
+        raise ValueError(f"no cost probe for query family {family!r}")
+
     # -- padding/chunking ----------------------------------------------------
 
     def _run_padded(

@@ -91,6 +91,36 @@ class FleetIngestEngine:
         sz = getattr(self._jit_update, "_cache_size", None)
         return sz() if callable(sz) else None
 
+    @classmethod
+    def cost_probe(
+        cls,
+        *,
+        tenants: int = 4,
+        width: int = 64,
+        depth: int = 2,
+        batch: int = 64,
+    ):
+        """Costlint sizing hook: a fresh fleet's donated update boundary at
+        a parameterized (T, w, d, B) — compiled across a geometric ladder
+        to prove arrivals stay O(B·d) flops and O(1) in T.  Returns
+        ``(jit_fn, args, counters_shape)``."""
+        from repro.core.sketch import SketchConfig
+
+        cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+        state = FleetSketch.empty(cfg, tenants, jax.random.key(0))
+        eng = cls(state)
+        leaves = jax.tree_util.tree_leaves(state)
+        uniq = tuple(leaves[i] for i in eng._uniq_leaf_idx)
+        slots = jnp.arange(batch, dtype=jnp.int32) % tenants
+        src = jnp.arange(batch, dtype=jnp.uint32)
+        dst = src + jnp.uint32(batch)
+        w = jnp.ones(batch, jnp.float32)
+        return (
+            eng._jit_update,
+            (uniq, slots, src, dst, w),
+            tuple(state.counters.shape),
+        )
+
     def dispatch(
         self,
         state: FleetSketch,

@@ -217,6 +217,55 @@ class FleetQueryEngine:
                 total += sz()
         return total
 
+    @staticmethod
+    def family_probe(
+        family: str,
+        *,
+        tenants: int = 4,
+        width: int = 64,
+        depth: int = 2,
+        n_queries: int = 32,
+        touched: int = 2,
+    ):
+        """Costlint sizing hook: the fleet family estimator + args at a
+        parameterized (T, w, d, Q, S) — compiled across a geometric ladder
+        to prove register families are O(d·Q) with exponent ≈ 0 in T and
+        closure maintenance is O(S·w²), never a T-wide scan.  ``touched``
+        is S, the stale-tenant stack depth for the closure families.
+        Returns ``(fn, args, counters_shape)``."""
+        from repro.core.sketch import SketchConfig
+
+        cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+        state = FleetSketch.empty(cfg, tenants, jax.random.key(0))
+        slots = jnp.arange(n_queries, dtype=jnp.int32) % tenants
+        keys = jnp.arange(n_queries, dtype=jnp.uint32)
+        shape = tuple(state.counters.shape)
+        if family == "edge":
+            args = (state, slots, keys, keys + jnp.uint32(1))
+        elif family in ("in_flow", "out_flow", "flow"):
+            args = (state, slots, keys)
+        elif family == "heavy_rel_vec":
+            thetas = jnp.full((n_queries,), 0.5, jnp.float32)
+            args = (state, slots, keys, thetas)
+        elif family == "closure":
+            sel = jnp.arange(touched, dtype=jnp.int32) % tenants
+            return fleet_closure_build, (state.counters, sel), shape
+        elif family == "closure_refresh":
+            sel = jnp.arange(touched, dtype=jnp.int32) % tenants
+            closures = fleet_closure_build(state.counters, sel)
+            rows = jnp.tile(
+                state.row_hash(keys[: min(8, n_queries)])[None],
+                (touched, 1, 1),
+            )
+            return (
+                fleet_closure_refresh,
+                (closures, state.counters, sel, rows),
+                shape,
+            )
+        else:
+            raise ValueError(f"no cost probe for fleet family {family!r}")
+        return _FLEET_FAMILIES[family], args, shape
+
     # -- padding/chunking (same discipline as QueryEngine._run_padded) -------
 
     def _run_padded(self, family: str, head, keys, tail=()):

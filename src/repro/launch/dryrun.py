@@ -16,6 +16,7 @@ from repro.distributed.sharding import ResolveReport, resolve_tree
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.roofline.analysis import (
+    compiled_memory_dict as _mem_dict,
     model_flops_for,
     parse_collectives,
     roofline_from_cost,
@@ -28,36 +29,6 @@ and the collective schedule (parsed from the post-SPMD HLO) for the roofline
 report.  Results land in results/dryrun/<arch>__<shape>__<mesh>.json and are
 resumable cell-by-cell.
 """
-
-
-def _mem_dict(compiled):
-    try:
-        ma = compiled.memory_analysis()
-    except Exception:
-        return None
-    if ma is None:
-        return None
-    out = {}
-    for k in (
-        "argument_size_in_bytes",
-        "output_size_in_bytes",
-        "temp_size_in_bytes",
-        "generated_code_size_in_bytes",
-        "alias_size_in_bytes",
-        "host_argument_size_in_bytes",
-        "host_output_size_in_bytes",
-        "host_temp_size_in_bytes",
-    ):
-        if hasattr(ma, k):
-            out[k] = int(getattr(ma, k))
-    if out:
-        args = out.get("argument_size_in_bytes", 0)
-        alias = out.get("alias_size_in_bytes", 0)
-        out["peak_bytes_per_device_est"] = (
-            args + out.get("output_size_in_bytes", 0) - alias
-            + out.get("temp_size_in_bytes", 0)
-        )
-    return out or None
 
 
 def _sharded_bytes(sds_tree, sharding_tree) -> int:

@@ -19,6 +19,53 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+
+def compiled_cost_dict(compiled) -> Dict[str, float]:
+    """``cost_analysis()`` of a compiled executable as a plain float dict.
+    XLA returns either a dict or a one-element list of dicts depending on
+    version; both normalize to ``{"flops": ..., "bytes accessed": ..., ...}``.
+    """
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    return {
+        k: float(v) for k, v in dict(cost).items() if isinstance(v, (int, float))
+    }
+
+
+def compiled_memory_dict(compiled) -> Optional[Dict[str, int]]:
+    """``memory_analysis()`` of a compiled executable as a plain int dict,
+    plus ``peak_bytes_per_device_est`` = args + output - alias + temp (the
+    donation-aware resident estimate).  ``None`` when the backend exposes no
+    memory analysis.  Shared by the launch dry-run and costlint."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+        "host_argument_size_in_bytes",
+        "host_output_size_in_bytes",
+        "host_temp_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if out:
+        args = out.get("argument_size_in_bytes", 0)
+        alias = out.get("alias_size_in_bytes", 0)
+        out["peak_bytes_per_device_est"] = (
+            args + out.get("output_size_in_bytes", 0) - alias
+            + out.get("temp_size_in_bytes", 0)
+        )
+    return out or None
+
+
 HW = dict(
     name="tpu_v5e",
     peak_flops_bf16=197e12,   # per chip

@@ -417,11 +417,327 @@ def test_jaxpr_pass_respects_entry_point_override():
 
 
 def test_end_to_end_repo_is_clean():
-    """The CI gate: both passes over the real tree, zero unbaselined."""
+    """The CI gate: jaxpr + source passes over the real tree, zero
+    unbaselined (costlint has its own gate test below — compiling the
+    cost ladders here would double the suite's compile bill)."""
     report = run_analysis(("jaxpr", "source"), root=SRC_REPRO, tests_dir=TESTS_DIR)
     new = [v for v in report["violations"] if not v["baselined"]]
     assert report["ok"], "unbaselined violations:\n" + "\n".join(
         f"{v['rule']} {v['subject']}: {v['message']}" for v in new
     )
-    # the registry really covers the engine surface
-    assert report["counts"]["entry_points"] == len(ENTRY_POINTS) >= 24
+    # the registry really covers the engine surface, including the
+    # turnstile-delete and window-advance session boundaries
+    assert report["counts"]["entry_points"] == len(ENTRY_POINTS) >= 26
+    names = set(report["checked_entry_points"])
+    assert {"ingest.delete_boundary", "window.advance_boundary"} <= names
+
+
+# ---------------------------------------------------------------------------
+# costlint — exponent fits, planted twins, donation proof, budgets
+# ---------------------------------------------------------------------------
+
+
+def test_fit_exponent_basics():
+    from repro.analysis.costlint import _fit_exponent
+
+    assert _fit_exponent((2, 4, 8), (7.0, 7.0, 7.0)) == pytest.approx(0.0)
+    assert _fit_exponent((2, 4), (10.0, 40.0)) == pytest.approx(2.0)
+    # all-zero metric clips at 1 -> exponent 0, not -inf
+    assert _fit_exponent((2, 4), (0.0, 0.0)) == pytest.approx(0.0)
+
+
+def test_planted_quadratic_ingest_fails_B_contract():
+    """An ingest twin with a hidden O(B²) pairwise coupling must blow the
+    declared O(B) flops exponent — the exact regression costlint exists
+    to catch.  The coupling rides in at 1e-9 so XLA cannot DCE it."""
+    from repro.analysis.contracts import (
+        AxisContract,
+        CostEntryPoint,
+        CostProbe,
+    )
+    from repro.analysis.costlint import run_cost_pass
+
+    def build(B=64):
+        from repro.core.ingest import ingest
+        from repro.core.sketch import GLavaSketch, SketchConfig
+
+        cfg = SketchConfig(depth=2, width_rows=64, width_cols=64)
+        sk = GLavaSketch.empty(cfg, jax.random.key(0))
+        src = jnp.arange(B, dtype=jnp.uint32)
+        rows, cols = sk.hash_edges(src, src + jnp.uint32(B))
+        wts = jnp.ones(B, jnp.float32)
+
+        def bad(c, r, cc, ww):
+            sim = jnp.sum(ww[:, None] * ww[None, :], axis=1)  # O(B²)
+            return ingest(c, r, cc, ww + 1e-9 * sim, backend="scatter")
+
+        return CostProbe(
+            fn=bad, args=(sk.counters, rows, cols, wts),
+            state_bytes=4 * 2 * 64 * 64,
+        )
+
+    ep = CostEntryPoint(
+        name="fix.cost.quadratic_ingest",
+        axes=(AxisContract("B", 1.0, (64, 128, 256)),),
+        build=build,
+    )
+    violations, meas = run_cost_pass([ep], check_budgets=False)
+    assert _rules(violations) == ["cost-exponent"]
+    assert violations[0].subject == "fix.cost.quadratic_ingest[B]"
+    assert meas[0]["axes"][0]["measured"] > 1.35
+
+
+def test_planted_tenant_wide_reduction_fails_T_contract():
+    """A fleet query twin that also scans the whole tenant stack must blow
+    the declared O(1)-in-T flops exponent — tenant isolation is the
+    fleet's headline claim."""
+    from repro.analysis.contracts import (
+        AxisContract,
+        CostEntryPoint,
+        CostProbe,
+    )
+    from repro.analysis.costlint import run_cost_pass
+
+    def build(T=2):
+        from repro.fleet.query import FleetQueryEngine
+
+        fn, args, shape = FleetQueryEngine.family_probe(
+            "in_flow", tenants=T, width=64, depth=2, n_queries=32
+        )
+
+        def bad(state, *rest):
+            return fn(state, *rest) + 1e-9 * jnp.sum(state.counters)
+
+        n = 1
+        for s in shape:
+            n *= s
+        return CostProbe(fn=bad, args=args, state_bytes=4 * n)
+
+    ep = CostEntryPoint(
+        name="fix.cost.tenant_scan",
+        axes=(AxisContract("T", 0.0, (2, 8)),),
+        build=build,
+    )
+    violations, meas = run_cost_pass([ep], check_budgets=False)
+    assert _rules(violations) == ["cost-exponent"]
+    assert violations[0].subject == "fix.cost.tenant_scan[T]"
+    assert meas[0]["axes"][0]["measured"] > 0.35
+
+
+def test_donation_memory_proof_positive_and_negative():
+    """An undonated jit presented as a donated boundary aliases 0 bytes ->
+    cost-donation-memory; the real session boundary aliases the sketch."""
+    from repro.analysis.contracts import (
+        COST_ENTRY_POINTS,
+        AxisContract,
+        CostEntryPoint,
+        CostProbe,
+    )
+    from repro.analysis.costlint import run_cost_pass
+
+    def build(w=64):
+        counters = jnp.ones((2, w, w))
+        jf = jax.jit(lambda c: c * 2.0 + 1.0)
+        return CostProbe(
+            fn=jf, args=(counters,), jit_fn=jf, state_bytes=4 * 2 * w * w
+        )
+
+    undonated = CostEntryPoint(
+        name="fix.cost.undonated",
+        axes=(AxisContract("w", 3.0, (32, 64), tol=1.0),),
+        build=build,
+        donated=True,
+    )
+    violations, _ = run_cost_pass([undonated], check_budgets=False)
+    assert _rules(violations) == ["cost-donation-memory"]
+    assert "donation dropped" in violations[0].message
+
+    real = next(
+        ep for ep in COST_ENTRY_POINTS if ep.name == "cost.ingest.jit_boundary"
+    )
+    clean, _ = run_cost_pass([real], check_budgets=False)
+    assert clean == []
+
+
+def test_broken_probe_is_a_finding_not_a_crash():
+    from repro.analysis.contracts import (
+        AxisContract,
+        CostEntryPoint,
+    )
+    from repro.analysis.costlint import run_cost_pass
+
+    def build(Q=8):
+        raise RuntimeError("probe exploded")
+
+    ep = CostEntryPoint(
+        name="fix.cost.broken",
+        axes=(AxisContract("Q", 1.0, (8, 16)),),
+        build=build,
+    )
+    violations, meas = run_cost_pass([ep], check_budgets=False)
+    assert _rules(violations) == ["cost-entry-broken"]
+    assert meas == []
+
+
+def test_cost_registry_passes_committed_budgets():
+    """The costlint CI gate: every registry entry measured at >=2 sizes
+    per axis, every exponent within contract, every committed ceiling
+    honored."""
+    from repro.analysis.contracts import COST_ENTRY_POINTS
+    from repro.analysis.costlint import load_budgets, run_cost_pass
+
+    budgets = load_budgets()
+    assert budgets is not None, "ANALYSIS_BUDGETS.json must be committed"
+    violations, measurements = run_cost_pass(budgets=budgets)
+    assert violations == [], "\n".join(v.render() for v in violations)
+    assert len(measurements) == len(COST_ENTRY_POINTS) >= 10
+    for m in measurements:
+        for fit in m["axes"]:
+            assert len(fit["sizes"]) >= 2 and len(fit["values"]) >= 2
+
+
+def test_budget_ratchet_roundtrip(tmp_path):
+    """update -> clean run passes -> hand-shrunk ceiling -> exit 1 with a
+    human-readable regression diff."""
+    budgets = tmp_path / "budgets.json"
+    entry = "cost.query.in_flow"
+    assert main([
+        "--update-budgets", "--cost-entries", entry,
+        "--budgets", str(budgets),
+    ]) == 0
+    data = json.loads(budgets.read_text())
+    assert entry in data["entries"]
+    # a filtered update must not ratchet the full-registry compile count
+    assert "compile_count" not in data
+
+    assert main([
+        "--passes", "costlint", "--cost-entries", entry,
+        "--budgets", str(budgets),
+    ]) == 0
+
+    data["entries"][entry]["peak_bytes"] = 1
+    budgets.write_text(json.dumps(data))
+    report_path = tmp_path / "report.json"
+    rc = main([
+        "--passes", "costlint", "--cost-entries", entry,
+        "--budgets", str(budgets),
+        "--format", "json", "--output", str(report_path),
+    ])
+    assert rc == 1
+    report = json.loads(report_path.read_text())
+    bad = [v for v in report["violations"] if v["rule"] == "cost-budget"]
+    assert bad and "exceeds committed ceiling" in bad[0]["message"]
+
+
+def test_missing_budgets_file_is_a_violation(tmp_path):
+    from repro.analysis.costlint import run_cost_pass
+
+    violations, _ = run_cost_pass([], budgets=None, full_registry=False)
+    assert _rules(violations) == ["cost-budget"]
+    assert violations[0].subject == "ANALYSIS_BUDGETS.json"
+
+
+# ---------------------------------------------------------------------------
+# baseline staleness + prune
+# ---------------------------------------------------------------------------
+
+
+def test_stale_baseline_warns_and_prunes(tmp_path):
+    from repro.analysis.baseline import load_baseline
+
+    clean_root = tmp_path / "pkg"
+    _write(clean_root, "core/clean.py", "def f():\n    return 0\n")
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps([
+        {"rule": "direct-jit", "subject": "core/gone.py::f:1",
+         "justification": "code was deleted"},
+    ]))
+
+    # the rule's pass ran and nothing matched -> stale, but only a WARN
+    report = run_analysis(
+        ("source",), root=clean_root, baseline=load_baseline(bl)
+    )
+    assert report["ok"]
+    assert report["stale_baseline"] == [["direct-jit", "core/gone.py::f:1"]]
+    assert report["counts"]["stale_baseline"] == 1
+
+    # the rule's pass did NOT run -> staleness is undecidable, no warn
+    report2 = run_analysis(
+        ("jaxpr",), root=clean_root, entry_points=(),
+        baseline=load_baseline(bl),
+    )
+    assert report2["stale_baseline"] == []
+
+    # --prune-baseline deletes it from the file
+    assert main([
+        "--passes", "source", "--root", str(clean_root),
+        "--baseline", str(bl), "--prune-baseline",
+    ]) == 0
+    assert json.loads(bl.read_text()) == []
+
+
+def test_live_baseline_entry_is_not_stale(tmp_path):
+    from repro.analysis.baseline import load_baseline
+
+    root = tmp_path / "pkg"
+    _write(
+        root, "core/adhoc.py",
+        """
+        import jax
+
+        def f(fn):
+            return jax.jit(fn)
+        """,
+    )
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps([
+        {"rule": "direct-jit", "subject": "core/adhoc.py::f:5",
+         "justification": "still here"},
+    ]))
+    report = run_analysis(("source",), root=root, baseline=load_baseline(bl))
+    assert report["ok"] and report["stale_baseline"] == []
+    assert report["counts"]["baselined"] == 1
+
+
+def test_committed_baseline_loads_and_maps_rules():
+    from repro.analysis.baseline import BASELINE, RULE_PASS
+
+    assert BASELINE, "committed baseline.json must load"
+    for rule, _subject in BASELINE:
+        assert rule in RULE_PASS, f"rule {rule} missing from RULE_PASS"
+
+
+# ---------------------------------------------------------------------------
+# benchmark trajectory history
+# ---------------------------------------------------------------------------
+
+
+def test_bench_history_append(tmp_path):
+    import sys
+
+    repo_root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(repo_root))
+    try:
+        from benchmarks.run import append_history
+    finally:
+        sys.path.remove(str(repo_root))
+
+    p = tmp_path / "BENCH_x.json"
+    # legacy flat list becomes the pr-0 seed record
+    p.write_text(json.dumps([{"name": "a", "us_per_call": 1.0}]))
+    h = append_history(p, [{"name": "b"}], pr=9, commit="abc1234")
+    assert [r["pr"] for r in h] == [0, 9]
+    assert h[0]["commit"] == "legacy"
+    assert h[0]["rows"] == [{"name": "a", "us_per_call": 1.0}]
+
+    # re-running the same PR replaces its record, no duplicates
+    h = append_history(p, [{"name": "c"}], pr=9, commit="def5678")
+    assert [r["pr"] for r in h] == [0, 9]
+    assert h[-1]["rows"] == [{"name": "c"}]
+
+    # no explicit pr -> one past the last record
+    h = append_history(p, [{"name": "d"}], commit="eee9999")
+    assert h[-1]["pr"] == 10
+    # and the file round-trips as history, not a flat list
+    on_disk = json.loads(p.read_text())
+    assert [r["pr"] for r in on_disk] == [0, 9, 10]
