@@ -16,6 +16,7 @@ CLI (the backend-sweep mode):
     python -m benchmarks.bench_ingest --backend all --batch 65536
     python -m benchmarks.bench_ingest --assert-preagg-win --batch 8192
     python -m benchmarks.bench_ingest --tenants 1 64 1024
+    python -m benchmarks.bench_ingest --wal
 
 ``--assert-preagg-win`` exits non-zero unless the pre-aggregated session
 path beats the plain scatter session on a zipf(1.5) batch — the CI smoke
@@ -175,6 +176,47 @@ def preagg_session_rows(batch: int = 32768):
     return rows
 
 
+def wal_rows(batch: int = 32768, depth: int = DEPTH, width: int = WIDTH,
+             fsync_every: int = 8):
+    """Durability tax (DESIGN.md Section 13): the same zipf(1.5) session
+    stream with the write-ahead log on (fsync batched every
+    ``fsync_every`` mutations) vs off.  ``wal_overhead`` records the
+    edges/sec ratio off/on — the price of crash recovery per batch."""
+    import shutil
+    import tempfile
+
+    cfg = SketchConfig(depth=depth, width_rows=width, width_cols=width)
+    src, dst, w = _zipf(batch, 1.5)
+
+    def rate(wal_dir):
+        gs = GraphStream.open(
+            cfg, ingest_backend="scatter", query_backend="jnp",
+            wal_dir=wal_dir, wal_fsync_every=fsync_every,
+        )
+
+        def step():
+            gs.ingest(src, dst, w)
+            gs.flush()
+            return gs._sketch.counters
+
+        compile_ms, us = _compile_then_steady(step)
+        return compile_ms, us, batch / (us / 1e6)
+
+    _, us_off, eps_off = rate(None)
+    tmp = tempfile.mkdtemp(prefix="bench-wal-")
+    try:
+        compile_ms, us_on, eps_on = rate(tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    record(
+        "wal_overhead", us_on / batch, batch=batch,
+        edges_per_s=round(eps_on), edges_per_s_nowal=round(eps_off),
+        overhead_x=round(us_on / max(us_off, 1e-9), 3),
+        fsync_every=fsync_every, compile_ms=round(compile_ms, 1),
+    )
+    return eps_on, eps_off
+
+
 def _fleet_rate(fleet, ids, src, dst, w):
     """(compile_ms, steady_us) for one mixed batch through the fleet."""
     def step():
@@ -287,6 +329,9 @@ def run():
     preagg_grid(batch=b)
     preagg_session_rows(batch=b)
 
+    # durability tax: write-ahead-logged session vs plain (wal_overhead)
+    wal_rows(batch=b)
+
     # multi-tenant fleet rows: fleet_edges_per_s per T + the 64-session
     # baseline (the Section 11 speedup_vs_sessions figure)
     fleet_sweep(batch=b)
@@ -321,12 +366,24 @@ def main():
              "the plain scatter session on a zipf(1.5) batch",
     )
     ap.add_argument(
+        "--wal", action="store_true",
+        help="time the WAL durability tax: zipf(1.5) session ingest with "
+             "the write-ahead log on (fsync batched) vs off",
+    )
+    ap.add_argument(
         "--tenants", type=int, nargs="+", default=None, metavar="T",
         help="fleet sweep: time mixed multi-tenant ingest at these tenant "
              f"counts (e.g. --tenants 1 64 1024; runs at width {FLEET_WIDTH} "
              "and records fleet_edges_per_s plus the 64-session baseline)",
     )
     args = ap.parse_args()
+    if args.wal:
+        eps_on, eps_off = wal_rows(batch=args.batch, depth=args.depth,
+                                   width=args.width)
+        print(f"wal on:  {eps_on:,.0f} edges/s")
+        print(f"wal off: {eps_off:,.0f} edges/s "
+              f"({eps_off / eps_on:.2f}x overhead)")
+        return
     if args.tenants:
         eps, base_eps = fleet_sweep(tuple(args.tenants), batch=args.batch,
                                     depth=args.depth)

@@ -7,7 +7,17 @@ batch, emitting timestamped alarm events.  θ is the heavy-hitter fraction
 of total stream weight (paper-style relative threshold).
 
 Run: PYTHONPATH=src python examples/ddos_monitor.py
+
+With ``--wal-dir DIR`` every batch is write-ahead-logged before its
+device dispatch, and ``--crash-after N`` runs the crash-replay
+self-check: the monitor is killed after N batches (no close, no final
+checkpoint), recovered in a fresh session via ``recover()``, driven to
+the end, and its event transcript asserted bit-identical to an
+uninterrupted run (DESIGN.md Section 13).
 """
+import argparse
+import tempfile
+
 import numpy as np
 
 from repro.api import GraphStream, Query, SketchConfig
@@ -15,49 +25,150 @@ from repro.api import GraphStream, Query, SketchConfig
 N_HOSTS = 20_000
 TARGET = 4242
 THETA = 0.10  # alarm when the target draws > 10% of ALL traffic
+N_BATCHES = 40
+ATTACK_AT = 25
+CKPT_EVERY = 10
 
-gs = GraphStream.open(SketchConfig(depth=4, width_rows=1024, width_cols=1024))
-rng = np.random.default_rng(0)
 
-print(f"[ddos] monitoring host {TARGET}: alarm when f̃_v(target,←) > {THETA:.0%} of F̃")
+def _make_batches(n_batches):
+    rng = np.random.default_rng(0)
+    batches = []
+    for t in range(n_batches):
+        # background traffic
+        src = rng.integers(0, N_HOSTS, 5000).astype(np.uint32)
+        dst = rng.integers(0, N_HOSTS, 5000).astype(np.uint32)
+        nbytes = rng.integers(40, 1500, 5000).astype(np.float32) / 1000.0
+        if t >= ATTACK_AT:  # volumetric attack: many sources flood the target
+            atk_src = rng.integers(0, N_HOSTS, 3000).astype(np.uint32)
+            src = np.concatenate([src, atk_src])
+            dst = np.concatenate([dst, np.full(3000, TARGET, np.uint32)])
+            nbytes = np.concatenate([nbytes, np.full(3000, 1.4, np.float32)])
+        batches.append((src, dst, nbytes))
+    return batches
 
-# The standing query: heavy-hitter check + the raw in-flow estimate, with
-# an alarm predicate on the in-flow bit.  every=1 → one event per batch.
-sub = gs.subscribe(
-    Query.heavy(TARGET, THETA),
-    Query.in_flow(TARGET),
-    every=1,
-    alarm=lambda results: bool(np.asarray(results[0].value[0])),
-    name="ddos-watch",
-)
 
-attack_started = None
-alarm_at = None
-for t in range(40):
-    # background traffic
-    src = rng.integers(0, N_HOSTS, 5000).astype(np.uint32)
-    dst = rng.integers(0, N_HOSTS, 5000).astype(np.uint32)
-    nbytes = rng.integers(40, 1500, 5000).astype(np.float32) / 1000.0
-    if t >= 25:  # volumetric attack: many sources flood the target
-        if attack_started is None:
-            attack_started = t
-        atk_src = rng.integers(0, N_HOSTS, 3000).astype(np.uint32)
-        src = np.concatenate([src, atk_src])
-        dst = np.concatenate([dst, np.full(3000, TARGET, np.uint32)])
-        nbytes = np.concatenate([nbytes, np.full(3000, 1.4, np.float32)])
+def _open(wal_dir=None, ckpt_dir=None):
+    gs = GraphStream.open(
+        SketchConfig(depth=4, width_rows=1024, width_cols=1024),
+        wal_dir=wal_dir,
+        checkpoint_dir=ckpt_dir,
+    )
+    # The standing query: heavy-hitter check + the raw in-flow estimate,
+    # with an alarm predicate on the in-flow bit.  every=1 → one event
+    # per batch.
+    sub = gs.subscribe(
+        Query.heavy(TARGET, THETA),
+        Query.in_flow(TARGET),
+        every=1,
+        alarm=lambda results: bool(np.asarray(results[0].value[0])),
+        name="ddos-watch",
+    )
+    return gs, sub
 
-    # ingest drives the subscription: the standing query re-evaluates and
-    # emits one event for this batch
-    gs.ingest(src, dst, nbytes)
-    (event,) = sub.poll()
-    est = float(np.asarray(event.results[1].value))
-    flag = "ALARM" if event.alarm else "     "
-    if t % 5 == 0 or (event.alarm and alarm_at is None):
-        print(f"[ddos] t={t:02d} {flag} f̃_v(target,←)={est:10.1f}")
-    if event.alarm and alarm_at is None:
-        alarm_at = t
 
-assert attack_started is not None and alarm_at is not None
-assert sub.ticks == 40
-print(f"[ddos] attack at t={attack_started}, alarm at t={alarm_at} "
-      f"(detection lag {alarm_at - attack_started} batches)")
+def _event_key(event):
+    return (
+        event.tick,
+        bool(event.alarm),
+        tuple(np.asarray(event.results[1].value).ravel().tolist()),
+    )
+
+
+def _drive(gs, sub, batches, transcript, start_t=0, verbose=True):
+    """Ingest each batch, poll its event, print the monitor line."""
+    alarm_at = None
+    for t, (src, dst, nbytes) in enumerate(batches, start=start_t):
+        gs.ingest(src, dst, nbytes)
+        (event,) = sub.poll()
+        transcript.append(_event_key(event))
+        est = float(np.asarray(event.results[1].value))
+        flag = "ALARM" if event.alarm else "     "
+        if verbose and (t % 5 == 0 or (event.alarm and alarm_at is None)):
+            print(f"[ddos] t={t:02d} {flag} f̃_v(target,←)={est:10.1f}")
+        if event.alarm and alarm_at is None:
+            alarm_at = t
+        if gs._ckpt is not None and (t + 1) % CKPT_EVERY == 0:
+            gs.checkpoint()
+    return alarm_at
+
+
+def run_monitor(wal_dir=None, ckpt_dir=None):
+    batches = _make_batches(N_BATCHES)
+    gs, sub = _open(wal_dir, ckpt_dir)
+    print(
+        f"[ddos] monitoring host {TARGET}: alarm when f̃_v(target,←) "
+        f"> {THETA:.0%} of F̃"
+    )
+    transcript = []
+    alarm_at = _drive(gs, sub, batches, transcript)
+    assert alarm_at is not None and alarm_at >= ATTACK_AT
+    assert sub.ticks == N_BATCHES
+    print(
+        f"[ddos] attack at t={ATTACK_AT}, alarm at t={alarm_at} "
+        f"(detection lag {alarm_at - ATTACK_AT} batches)"
+    )
+    return transcript
+
+
+def run_crash_replay(wal_dir, ckpt_dir, crash_after):
+    """Crash after ``crash_after`` batches, recover, finish — and assert
+    the stitched event transcript matches an uninterrupted run."""
+    print(f"[ddos] uninterrupted oracle run ({N_BATCHES} batches)")
+    want = run_monitor()
+
+    batches = _make_batches(N_BATCHES)
+    gs, sub = _open(wal_dir, ckpt_dir)
+    got = []
+    _drive(gs, sub, batches[:crash_after], got, verbose=False)
+    consumed = sub.ticks
+    print(f"[ddos] CRASH after batch {crash_after} (consumed tick {consumed})")
+    del gs  # crash: no close, no final checkpoint
+
+    gs, sub = _open(wal_dir, ckpt_dir)
+    sub.seek(consumed)  # the consumer's durable position, BEFORE recover
+    report = gs.recover()
+    print(
+        f"[ddos] recovered: checkpoint step {report.step}, "
+        f"{report.mutations_replayed} WAL mutations replayed, "
+        f"{sub.events_deduped} events deduped"
+    )
+    got.extend(_event_key(e) for e in sub.poll())
+    _drive(gs, sub, batches[crash_after:], got, start_t=crash_after, verbose=False)
+
+    assert got == want, "replayed transcript diverged from the oracle"
+    print(
+        f"[ddos] crash-replay OK: {len(got)} events bit-identical to the "
+        f"uninterrupted run"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--wal-dir",
+        default=None,
+        help="write-ahead-log every batch before its device dispatch",
+    )
+    ap.add_argument(
+        "--ckpt-dir",
+        default=None,
+        help="checkpoint directory (every %d batches)" % CKPT_EVERY,
+    )
+    ap.add_argument(
+        "--crash-after",
+        type=int,
+        default=None,
+        help="crash-replay self-check: kill after N batches, recover(), "
+        "assert the event transcript matches an uninterrupted run",
+    )
+    args = ap.parse_args()
+    if args.crash_after is not None:
+        wal = args.wal_dir or tempfile.mkdtemp(prefix="ddos-wal-")
+        ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="ddos-ckpt-")
+        run_crash_replay(wal, ckpt, args.crash_after)
+    else:
+        run_monitor(args.wal_dir, args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -279,6 +279,19 @@ def _advance_window_boundary() -> TracedEntry:
     return TracedEntry(fn=jit_fn, args=args, counters_shape=shape, jit_fn=jit_fn)
 
 
+def _update_slice_boundary() -> TracedEntry:
+    """The event-time slice-routing boundary (DESIGN.md Section 13): one
+    batch folded into ONE ring slot, with the slot riding as a traced
+    int32 — a single compiled update must serve every slice, and the whole
+    (K, d, w_r, w_c) ring must pass through by donation, never by copy."""
+    from repro.api.stream import GraphStream
+
+    jit_fn, args, shape = GraphStream.cost_probe_update_slice(
+        width=_FIXTURE_WIDTH, depth=_FIXTURE_DEPTH, slices=4, batch=8
+    )
+    return TracedEntry(fn=jit_fn, args=args, counters_shape=shape, jit_fn=jit_fn)
+
+
 def _query_entry(family: str) -> Callable[[], TracedEntry]:
     def build():
         import jax.numpy as jnp
@@ -550,6 +563,12 @@ ENTRY_POINTS: Tuple[EntryPoint, ...] = (
         REGISTER_SERVED + ("donation-applied",),
         _advance_window_boundary,
     ),
+    # -- the event-time plane: watermark-routed slice updates ---------------
+    EntryPoint(
+        "stream.update_slice_boundary",
+        REGISTER_SERVED + ("donation-applied",),
+        _update_slice_boundary,
+    ),
     # -- every QueryEngine family -----------------------------------------
     EntryPoint("query.edge", HOT, _query_entry("edge")),
     EntryPoint("query.edge.pallas", HOT, _query_entry("edge.pallas")),
@@ -713,6 +732,20 @@ def _cost_ingest_boundary(B: int = 64, w: int = 64) -> CostProbe:
     )
 
 
+def _cost_update_slice_boundary(
+    B: int = 64, w: int = 64, K: int = 4
+) -> CostProbe:
+    from repro.api.stream import GraphStream
+
+    jit_fn, args, shape = GraphStream.cost_probe_update_slice(
+        width=w, depth=_FIXTURE_DEPTH, slices=K, batch=B
+    )
+    return CostProbe(
+        fn=jit_fn, args=args, jit_fn=jit_fn,
+        state_bytes=_counters_nbytes(shape),
+    )
+
+
 def _cost_fleet_ingest_boundary(
     B: int = 64, T: int = 2, w: int = 64
 ) -> CostProbe:
@@ -797,6 +830,22 @@ COST_ENTRY_POINTS: Tuple[CostEntryPoint, ...] = (
         "cost.ingest.jit_boundary",
         (AxisContract("B", 1.0, _B3),),
         _cost_ingest_boundary,
+        donated=True,
+        edges_axis="B",
+    ),
+    # Event-time slice routing: O(B·d) scatter work plus ONE slice of
+    # data movement — the traced-slot extract/store is O(d·w²), and the
+    # ring length K must stay out of the per-batch cost entirely (a K
+    # exponent > 0 would mean the boundary copies the whole ring instead
+    # of riding the donated pass-through).
+    CostEntryPoint(
+        "cost.stream.update_slice",
+        (
+            AxisContract("B", 1.0, _B3),
+            AxisContract("w", 2.0, _W2, tol=0.4),
+            AxisContract("K", 0.0, (4, 8, 16)),
+        ),
+        _cost_update_slice_boundary,
         donated=True,
         edges_axis="B",
     ),

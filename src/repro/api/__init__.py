@@ -34,24 +34,37 @@ from repro.api.query import (
     error_bound_for,
     validate_theta,
 )
-from repro.api.stream import GraphStream, IngestReceipt, StreamStats
+from repro.api.stream import (
+    GraphStream,
+    IngestReceipt,
+    RecoveryReport,
+    StreamStats,
+)
 from repro.api.subscription import Subscription, SubscriptionEvent
 from repro.core.hashing import fnv1a_labels
 from repro.core.sketch import SketchConfig
+from repro.stream.events import EventFeed, EventOverflowError
+from repro.stream.wal import WriteAheadLog
+from repro.stream.watermark import WatermarkTracker
 
 __all__ = [
     "FAMILIES",
     "CompiledPlan",
     "ErrorBound",
+    "EventFeed",
+    "EventOverflowError",
     "GraphStream",
     "IngestReceipt",
     "Query",
     "QueryBatch",
     "QueryResult",
+    "RecoveryReport",
     "SketchConfig",
     "StreamStats",
     "Subscription",
     "SubscriptionEvent",
+    "WatermarkTracker",
+    "WriteAheadLog",
     "compile_batch",
     "encode_label",
     "encode_labels",

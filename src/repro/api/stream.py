@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
@@ -46,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.codec import encode_labels
+from repro.api.codec import encode_label, encode_labels
 from repro.api.planner import execute
 from repro.api.query import (
     ErrorBound,
@@ -60,6 +61,7 @@ from repro.api.subscription import (
     DEFAULT_MAX_PENDING,
     Subscription,
     SubscriptionEvent,
+    sub_progress_key,
 )
 from repro.core import queries as queries_mod
 from repro.core.ingest import (
@@ -72,10 +74,25 @@ from repro.core.ingest import (
 from repro.core.query_engine import QueryEngine
 from repro.core.sketch import GLavaSketch, SketchConfig
 from repro.core.window import SlidingWindowSketch
+from repro.stream.events import EventFeed
+from repro.stream.wal import (
+    AdvanceMutation,
+    EdgeMutation,
+    WriteAheadLog,
+)
+from repro.stream.watermark import (
+    DEFAULT_SOURCE,
+    WatermarkTracker,
+    slice_of,
+    slices_of,
+)
 
 # Session-wide event feed bound (per-subscription queues have their own);
-# when nobody drains ``gs.events()`` the oldest entries drop.
+# past it the session's ``events_policy`` applies and ``events_dropped``
+# counts the loss (no more silent truncation).
 EVENT_LOG_MAXLEN = 4096
+
+LATE_POLICIES = ("retract", "drop")
 
 
 @dataclasses.dataclass
@@ -90,6 +107,7 @@ class StreamStats:
     closure_refreshes: int = 0
     closure_incremental_refreshes: int = 0
     subscription_ticks: int = 0
+    auto_advances: int = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -100,6 +118,7 @@ class StreamStats:
             "closure_refreshes": self.closure_refreshes,
             "closure_incremental_refreshes": self.closure_incremental_refreshes,
             "subscription_ticks": self.subscription_ticks,
+            "auto_advances": self.auto_advances,
         }
 
 
@@ -123,6 +142,30 @@ class IngestReceipt:
     n_edges: int
     touched_keys: Optional[np.ndarray]
     touched_rows: Optional[jax.Array] = None
+    # Event-time plane (None / 0 for arrival-ordered sessions): the
+    # batch's event-time span, the session watermark after folding it,
+    # how many edges the lateness policy dropped/retracted, how many
+    # slice advances the watermark drove, and the batch's durable WAL
+    # commit seq (None when the session has no WAL).
+    event_time_min: Optional[float] = None
+    event_time_max: Optional[float] = None
+    watermark: Optional[float] = None
+    late_dropped: int = 0
+    late_retracted: int = 0
+    auto_advances: int = 0
+    wal_seq: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What :meth:`GraphStream.recover` did: the checkpoint step it
+    restored (None = no checkpoint, full-genesis replay), how many WAL
+    mutations it replayed, and the session epoch / WAL position after."""
+
+    step: Optional[int]
+    mutations_replayed: int
+    epoch: int
+    wal_seq: int
 
 
 def _preset(name: str) -> SketchConfig:
@@ -160,9 +203,60 @@ class GraphStream:
         double_buffer: bool = True,
         max_inflight: int = 2,
         preagg: str = "auto",
+        wal_dir: Optional[str] = None,
+        wal_fsync_every: int = 1,
+        slice_width: Optional[float] = None,
+        max_lateness: Optional[float] = None,
+        late_policy: str = "retract",
+        events_policy: str = "drop_oldest",
     ):
         if mesh is not None and window_slices:
             raise ValueError("windowed + distributed sessions are not supported yet")
+        # Event-time plane: slice_width maps event times onto the window
+        # ring; max_lateness bounds out-of-orderness (how far behind the
+        # per-source maximum the watermark trails).
+        if late_policy not in LATE_POLICIES:
+            raise ValueError(
+                f"unknown late_policy {late_policy!r} (want one of {LATE_POLICIES})"
+            )
+        self._late_policy = late_policy
+        self._tracker: Optional[WatermarkTracker] = None
+        self._slice_width: Optional[float] = None
+        self._lead = 0
+        self._head_slice: Optional[int] = None
+        # Host mirror of the ring's current-slot index: slot(b) for an
+        # absolute slice b is (b - head_slice + ring_pos) % K, an invariant
+        # because the head and the ring only ever advance together.
+        self._ring_pos = 0
+        if max_lateness is not None and slice_width is None:
+            raise ValueError("max_lateness needs slice_width= (event-time slicing)")
+        if slice_width is not None:
+            if not window_slices:
+                raise ValueError("slice_width needs window_slices= (a sliding window)")
+            slice_width = float(slice_width)
+            if not (slice_width > 0.0) or not math.isfinite(slice_width):
+                raise ValueError(f"slice_width must be finite and > 0, got {slice_width}")
+            lateness = float(max_lateness) if max_lateness is not None else 0.0
+            self._tracker = WatermarkTracker(lateness)
+            self._slice_width = slice_width
+            # Head slices the ring must keep open AHEAD of the watermark:
+            # an in-bound edge (t >= W) from the watermark-defining source
+            # sits at most max_lateness past W, i.e. <= lead slices ahead.
+            self._lead = int(math.ceil(lateness / slice_width))
+            if self._lead + 1 > window_slices:
+                raise ValueError(
+                    f"max_lateness={lateness:g} spans {self._lead} slices of "
+                    f"width {slice_width:g} — it must fit inside the "
+                    f"window ring (window_slices={window_slices}); widen the "
+                    f"slices or deepen the window"
+                )
+        self._wal = (
+            WriteAheadLog(wal_dir, fsync_every=wal_fsync_every)
+            if wal_dir is not None
+            else None
+        )
+        self._replaying = False
+        self._last_restore_meta: Dict = {}
         self.config = config
         if window_slices:
             self._window: Optional[SlidingWindowSketch] = SlidingWindowSketch.empty(
@@ -195,9 +289,7 @@ class GraphStream:
         # last closure sync; full rebuild required").
         self._subs: Dict[int, Subscription] = {}
         self._next_sub_id = 0
-        self._event_log: collections.deque = collections.deque(
-            maxlen=EVENT_LOG_MAXLEN
-        )
+        self._event_log = EventFeed(EVENT_LOG_MAXLEN, events_policy)
         self._touched: Optional[List[np.ndarray]] = []
         self._touched_count = 0
         self._monitor_subs: Dict[Tuple[int, float], Subscription] = {}
@@ -281,8 +373,23 @@ class GraphStream:
                 return jax.tree_util.tree_leaves(live.advance())
 
             self._jit_advance = jax.jit(_advance, donate_argnums=0)
+
+            # Event-time routing boundary: fold a batch into an ARBITRARY
+            # ring slot (late-but-in-bound edges land in the slice their
+            # event time belongs to).  The slot is a traced int32 scalar,
+            # so ONE compiled update serves all K slices; the ring is
+            # donated exactly like _jit_update.
+            def _update_slice(uniq, s, d, w, slot):
+                live = jax.tree_util.tree_unflatten(
+                    treedef, [uniq[j] for j in slots]
+                )
+                new = live.update_at(slot, s, d, w, backend=backend)
+                return jax.tree_util.tree_leaves(new), jnp.sum(w)
+
+            self._jit_update_slice = jax.jit(_update_slice, donate_argnums=0)
         else:
             self._jit_advance = None
+            self._jit_update_slice = None
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -359,12 +466,65 @@ class GraphStream:
         uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
         return gs._jit_advance, (uniq,), tuple(gs._window.slices.shape)
 
+    @classmethod
+    def cost_probe_update_slice(
+        cls, *, width: int = 64, depth: int = 2, slices: int = 4, batch: int = 64
+    ):
+        """The donated event-time slice-routing boundary at a parameterized
+        (w, d, K, B) — one batch folded into one traced ring slot.
+        Returns ``(jit_fn, args, slices_shape)``."""
+        gs = cls.open(
+            SketchConfig(depth=depth, width_rows=width, width_cols=width),
+            window_slices=slices,
+            ingest_backend="scatter",
+            query_backend="jnp",
+        )
+        leaves = jax.tree_util.tree_leaves(gs._window)
+        uniq = tuple(leaves[i] for i in gs._uniq_leaf_idx)
+        src = jnp.arange(batch, dtype=jnp.uint32)
+        dst = src + jnp.uint32(batch)
+        w = jnp.ones((batch,), jnp.float32)
+        slot = jnp.array(0, jnp.int32)
+        return (
+            gs._jit_update_slice,
+            (uniq, src, dst, w, slot),
+            tuple(gs._window.slices.shape),
+        )
+
     # -- state ---------------------------------------------------------------
 
     @property
     def epoch(self) -> int:
         """Mutation counter; tags the engine's closure cache."""
         return self._epoch
+
+    @property
+    def watermark(self) -> Optional[float]:
+        """The event-time low watermark (None on arrival-ordered sessions;
+        -inf before the first timestamped batch)."""
+        return None if self._tracker is None else self._tracker.watermark
+
+    @property
+    def late_dropped(self) -> int:
+        """Too-late edges dropped by ``late_policy="drop"`` (monotone)."""
+        return 0 if self._tracker is None else self._tracker.late_dropped
+
+    @property
+    def late_retracted(self) -> int:
+        """Too-late edges backed out via the turnstile-delete path by
+        ``late_policy="retract"`` (monotone)."""
+        return 0 if self._tracker is None else self._tracker.late_retracted
+
+    @property
+    def events_dropped(self) -> int:
+        """Session-feed events lost to the overflow policy (monotone); the
+        per-subscription counters live on ``Subscription.events_dropped``."""
+        return self._event_log.dropped
+
+    @property
+    def wal_seq(self) -> Optional[int]:
+        """The WAL's last durable record seq (None without a WAL)."""
+        return None if self._wal is None else self._wal.last_seq
 
     @property
     def sketch(self) -> GLavaSketch:
@@ -411,7 +571,9 @@ class GraphStream:
         new_leaves, token = self._jit_update_pre(uniq, s, d, w, su, sw, du, dw)
         return jax.tree_util.tree_unflatten(self._live_treedef, new_leaves), token
 
-    def ingest(self, src, dst, weights=None) -> IngestReceipt:
+    def ingest(
+        self, src, dst, weights=None, *, timestamps=None, source=None
+    ) -> IngestReceipt:
         """Fold one edge batch into the summary.  ``src``/``dst`` are label
         batches (str or int — encoded here by the key codec); returns as
         soon as the device accepts the batch (double-buffered; call
@@ -419,10 +581,20 @@ class GraphStream:
         comes due on this mutation, in which case the batch lands and the
         standing queries re-evaluate before returning.
 
+        ``timestamps`` is the per-edge EVENT-TIME column (float seconds,
+        any epoch).  On an event-time session (opened with ``slice_width=``
+        / ``max_lateness=``) it is required: the watermark tracker folds the
+        batch, auto-advances the sliding window when the watermark crosses
+        a slice boundary, routes late-but-in-bound edges into the slice
+        their event time belongs to, and drops or retracts too-late edges
+        per ``late_policy``.  ``source`` names the emitting stream for the
+        per-source low-watermark merge (one slow source holds the session
+        watermark back).
+
         Returns an :class:`IngestReceipt` carrying the batch's touched-key
         set (the rows it wrote) — the delta the incremental closure refresh
-        consumes."""
-        t0 = time.time()
+        consumes — plus the event-time fields (watermark, late counts, WAL
+        seq) when those planes are active."""
         s_np = np.atleast_1d(encode_labels(src))
         d_np = np.atleast_1d(encode_labels(dst))
         if s_np.shape != d_np.shape:
@@ -435,7 +607,53 @@ class GraphStream:
             if weights is None
             else np.asarray(weights, np.float32)
         )
-        additive = weights is None or not bool(np.any(w_np < 0))
+        ts_np = None
+        if timestamps is not None:
+            ts_np = np.atleast_1d(np.asarray(timestamps, np.float64))
+            if ts_np.shape != s_np.shape:
+                raise ValueError(
+                    f"timestamps/src shape mismatch: {ts_np.shape} vs {s_np.shape}"
+                )
+            if ts_np.size and not np.all(np.isfinite(ts_np)):
+                raise ValueError("event timestamps must be finite")
+        elif self._tracker is not None:
+            raise ValueError(
+                "event-time session (opened with slice_width=/max_lateness=) "
+                "requires timestamps= on every ingest"
+            )
+        source_key = (
+            DEFAULT_SOURCE if source is None else int(encode_label(source))
+        )
+        return self._ingest_encoded(s_np, d_np, w_np, ts_np, source_key)
+
+    def _ingest_encoded(
+        self,
+        s_np: np.ndarray,
+        d_np: np.ndarray,
+        w_np: np.ndarray,
+        ts_np: Optional[np.ndarray],
+        source_key: int,
+    ) -> IngestReceipt:
+        """Post-codec ingest: the path WAL replay re-enters (keys are
+        already uint32, the source label is already hashed).  Appends to
+        the WAL FIRST — before any device dispatch — so an acknowledged
+        batch is always recoverable."""
+        t0 = time.time()
+        n_edges = int(s_np.shape[0])
+        wal_seq = None
+        if self._wal is not None and not self._replaying:
+            wal_seq = self._wal.append_edges(
+                s_np, d_np, w_np, ts_np, source_key=source_key
+            )
+        ev_min = ev_max = None
+        if ts_np is not None and n_edges:
+            ev_min, ev_max = float(ts_np.min()), float(ts_np.max())
+        if self._tracker is not None:
+            return self._ingest_eventtime(
+                t0, s_np, d_np, w_np, ts_np, source_key,
+                ev_min=ev_min, ev_max=ev_max, wal_seq=wal_seq,
+            )
+        additive = not bool(np.any(w_np < 0))
         # Heavy-tail fast path: collapse duplicate (src, dst) pairs on the
         # host (we are already host-side for label encoding), so the device
         # scatters one slot per distinct pair and the flow registers one
@@ -530,17 +748,152 @@ class GraphStream:
             n_edges=n_edges,
             touched_keys=touched,
             touched_rows=touched_rows if additive else None,
+            event_time_min=ev_min,
+            event_time_max=ev_max,
+            wal_seq=wal_seq,
         )
         self._after_mutation()
         return receipt
 
-    def delete(self, src, dst, weights=None) -> IngestReceipt:
+    def _dispatch_update_slice(self, s_np, d_np, w_np, slot: int) -> None:
+        """One donated event-time dispatch into ring slot ``slot``.  Arrays
+        are padded to power-of-two buckets (zero weights are the identity)
+        so variable per-slice group sizes cost a bounded trace ladder."""
+        s = jnp.asarray(pad_bucket(s_np))
+        d = jnp.asarray(pad_bucket(d_np))
+        w = jnp.asarray(pad_bucket(w_np))
+        leaves = jax.tree_util.tree_leaves(self._window)
+        uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
+        new_leaves, token = self._jit_update_slice(
+            uniq, s, d, w, jnp.asarray(slot, jnp.int32)
+        )
+        self._window = jax.tree_util.tree_unflatten(
+            self._live_treedef, new_leaves
+        )
+        self._inflight.append(token)
+
+    def _ingest_eventtime(
+        self,
+        t0: float,
+        s_np: np.ndarray,
+        d_np: np.ndarray,
+        w_np: np.ndarray,
+        ts_np: np.ndarray,
+        source_key: int,
+        *,
+        ev_min: Optional[float],
+        ev_max: Optional[float],
+        wal_seq: Optional[int],
+    ) -> IngestReceipt:
+        """Event-time ingest: watermark fold -> auto-advance -> slice
+        routing -> late-edge policy, all driven by the batch's event-time
+        column.  Deterministic given the mutation sequence, which is what
+        makes WAL replay bit-identical."""
+        K = self._window.n_slices
+        width = self._slice_width
+        late_dropped = late_retracted = auto_adv = 0
+        watermark = None
+        additive = not bool(np.any(w_np < 0))
+        late_mask = None
+        floor_slot = 0
+        if n_edges := int(s_np.shape[0]):
+            # Lateness is judged against the watermark PROMISED before this
+            # batch arrived — the batch's own maximum must not retroactively
+            # declare its earlier edges late, or an in-order batch spanning
+            # more than max_lateness would retract its own head.
+            promised = self._tracker.watermark
+            watermark = self._tracker.observe(source_key, ev_max)
+            b = slices_of(ts_np, width)
+            late_mask = ts_np < promised
+            # New ring head: the watermark keeps `lead` slices open past
+            # itself; an in-bound burst ahead of a lagging source can push
+            # the head further.  Monotone by construction.
+            target = slice_of(watermark, width) + self._lead
+            if not late_mask.all():
+                target = max(target, int(b[~late_mask].max()))
+            prev = self._head_slice if self._head_slice is not None else target
+            target = max(target, prev)
+            auto_adv = target - prev
+            self._head_slice = target
+            for _ in range(auto_adv):
+                self._advance_once()
+            self.stats.auto_advances += auto_adv
+            # Oldest live slice after the advances; in-bound-by-watermark
+            # edges that still land below the ring (a fast source far ahead
+            # of a slow one) are operationally late too.  Ring slots are
+            # addressed RELATIVE to the head — the ring's current slot need
+            # not start congruent to the first head slice.
+            slot_off = (self._ring_pos - self._head_slice) % K
+            floor_slice = self._head_slice - K + 1
+            floor_slot = int((floor_slice + slot_off) % K)
+            late_mask = late_mask | (b < floor_slice)
+            n_late = int(late_mask.sum())
+            if n_late and self._late_policy == "drop":
+                keep = ~late_mask
+                s_np, d_np, w_np, b = s_np[keep], d_np[keep], w_np[keep], b[keep]
+                late_dropped = n_late
+                self._tracker.late_dropped += n_late
+            elif n_late:
+                # Retract path: the whole batch lands (late edges clamped
+                # to the oldest live slice), then the late subset is backed
+                # out through the turnstile-delete path — same slot,
+                # negative weights.
+                b = np.where(late_mask, floor_slice, b)
+                late_retracted = n_late
+                self._tracker.late_retracted += n_late
+            touched = None
+            if self._touched is not None and additive and late_retracted == 0:
+                touched = touched_row_keys(
+                    s_np,
+                    None if self.config.directed else d_np,
+                    cap=self.config.width_rows,
+                )
+            slots = (b + slot_off) % K
+            for slot in np.unique(slots).astype(np.int32):
+                m = slots == slot
+                self._dispatch_update_slice(s_np[m], d_np[m], w_np[m], int(slot))
+            if late_retracted and self._late_policy == "retract":
+                m = late_mask
+                self._dispatch_update_slice(
+                    s_np[m], d_np[m], -w_np[m], floor_slot
+                )
+                additive = False  # the retraction is a turnstile delete
+        else:
+            touched = np.zeros(0, np.uint32) if self._touched is not None else None
+        while len(self._inflight) > self._max_inflight:
+            jax.block_until_ready(self._inflight.popleft())
+        self.stats.edges_ingested += n_edges
+        self.stats.ingest_s += time.time() - t0
+        self._epoch += 1
+        self._note_touched(touched if additive else None)
+        receipt = IngestReceipt(
+            epoch=self._epoch,
+            n_edges=n_edges,
+            touched_keys=touched if additive else None,
+            event_time_min=ev_min,
+            event_time_max=ev_max,
+            watermark=watermark,
+            late_dropped=late_dropped,
+            late_retracted=late_retracted,
+            auto_advances=auto_adv,
+            wal_seq=wal_seq,
+        )
+        self._after_mutation()
+        return receipt
+
+    def delete(
+        self, src, dst, weights=None, *, timestamps=None, source=None
+    ) -> IngestReceipt:
         """Turnstile deletion: negative-weight ingest (paper Section 6.1.1).
         Not additions-only, so the receipt's touched set is ``None`` and any
-        cached reachability closure rebuilds from scratch on next use."""
+        cached reachability closure rebuilds from scratch on next use.
+        Event-time sessions route the retraction into the slice the
+        original edge's ``timestamps`` place it in."""
         if weights is None:
             weights = np.ones(len(np.atleast_1d(np.asarray(src))), np.float32)
-        return self.ingest(src, dst, -np.asarray(weights))
+        return self.ingest(
+            src, dst, -np.asarray(weights), timestamps=timestamps, source=source
+        )
 
     def flush(self) -> None:
         """Block until every dispatched ingest batch has landed on device."""
@@ -591,6 +944,7 @@ class GraphStream:
         alarm: Optional[Callable[[List[QueryResult]], bool]] = None,
         name: Optional[str] = None,
         max_pending: int = DEFAULT_MAX_PENDING,
+        overflow: str = "drop_oldest",
     ) -> Subscription:
         """Register a standing query batch: a :class:`QueryBatch` (or Query
         arguments, like :meth:`query`) compiled ONCE by the planner and
@@ -623,6 +977,7 @@ class GraphStream:
             alarm=alarm,
             name=name,
             max_pending=max_pending,
+            overflow=overflow,
         )
         self._next_sub_id += 1
         self._subs[sub.id] = sub
@@ -714,8 +1069,11 @@ class GraphStream:
                 results=tuple(results),
                 alarm=None if sub.alarm is None else bool(sub.alarm(results)),
             )
-            sub._deliver(event)
-            self._event_log.append(event)
+            if sub._deliver(event):
+                # Dedup'd re-emissions (exactly-once replay floor) still
+                # advance the subscription's progress, but never re-enter
+                # the feeds or callbacks.
+                self._event_log.push(event)
             self.stats.subscription_ticks += 1
             self._count_served(results)
         self.stats.query_s += time.time() - t0
@@ -790,18 +1148,36 @@ class GraphStream:
         """Move the sliding window to the next time slice (expiring the
         oldest slice); no-op for non-windowed sessions.  Counts as a
         mutation for subscriptions; expiry removes edges, so any cached
-        reachability closure rebuilds from scratch on next use."""
-        if self._window is not None:
-            self.flush()
-            leaves = jax.tree_util.tree_leaves(self._window)
-            uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
-            new_leaves = self._jit_advance(uniq)
-            self._window = jax.tree_util.tree_unflatten(
-                self._live_treedef, new_leaves
-            )
-            self._epoch += 1
-            self._note_touched(None)
-            self._after_mutation()
+        reachability closure rebuilds from scratch on next use.
+
+        On an event-time session this also moves the ring head one slice
+        forward (an explicit advance DECLARES a new open slice; the
+        watermark keeps driving automatic ones).  Explicit advances are
+        WAL-logged; watermark-driven ones are not — replay re-derives them
+        from the logged event times."""
+        if self._window is None:
+            return
+        if self._wal is not None and not self._replaying:
+            self._wal.append_advance()
+        if self._head_slice is not None:
+            self._head_slice += 1
+        self._advance_once()
+
+    def _advance_once(self) -> None:
+        """One ring advance through the donated boundary: expiry + epoch
+        bump + subscription tick.  Shared by explicit ``advance_window``
+        and the watermark-driven automatic path (which is NOT WAL-logged)."""
+        self.flush()
+        leaves = jax.tree_util.tree_leaves(self._window)
+        uniq = tuple(leaves[i] for i in self._uniq_leaf_idx)
+        new_leaves = self._jit_advance(uniq)
+        self._window = jax.tree_util.tree_unflatten(
+            self._live_treedef, new_leaves
+        )
+        self._ring_pos = (self._ring_pos + 1) % self._window.n_slices
+        self._epoch += 1
+        self._note_touched(None)
+        self._after_mutation()
 
     def merge(self, other: "GraphStream") -> "GraphStream":
         """Merge another session's summary into this one (linearity; the
@@ -816,6 +1192,11 @@ class GraphStream:
                 "cannot merge sketches with different hash families "
                 "(open both sessions with the same config and seed)"
             )
+        if self._wal is not None and not self._replaying:
+            # The merged-in state never went through this WAL: log a
+            # barrier replay refuses to cross, and checkpoint() right
+            # after so recovery never needs to.
+            self._wal.append_merge_barrier()
         self._sketch = self._sketch.merge(other._sketch)
         self.stats.edges_ingested += other.stats.edges_ingested
         self._epoch += 1
@@ -823,15 +1204,52 @@ class GraphStream:
         self._after_mutation()
         return self
 
+    def _sub_key(self, sub: Subscription) -> str:
+        return sub_progress_key(sub)
+
     def checkpoint(self, step: Optional[int] = None) -> int:
         """Durably save the session state (requires ``checkpoint_dir``).
-        Returns the step the checkpoint was saved under."""
+        Returns the step the checkpoint was saved under.
+
+        With a WAL attached, the checkpoint also records its durable WAL
+        position (``wal_seq``), the watermark-tracker state, and each
+        active subscription's tick progress — everything :meth:`recover`
+        needs for exactly-once replay — then rotates the WAL segment and
+        drops segments every retained checkpoint already covers."""
         if self._ckpt is None:
             raise ValueError("open the session with checkpoint_dir= to checkpoint")
         self.flush()
         step = self._epoch if step is None else step
         state = self._window if self._window is not None else self._sketch
-        self._ckpt.save(step, state, metadata={"epoch": self._epoch})
+        meta: Dict = {"epoch": self._epoch}
+        if self._wal is not None:
+            self._wal.sync()
+            meta["wal_seq"] = self._wal.last_seq
+        if self._tracker is not None:
+            meta["watermark"] = self._tracker.state()
+            meta["head_slice"] = self._head_slice
+        subs = {
+            self._sub_key(s): {"ticks": s.ticks, "pending": s._mutations_pending}
+            for s in self._subs.values()
+            if s.active
+        }
+        if subs:
+            meta["subs"] = subs
+        self._ckpt.save(step, state, metadata=meta)
+        if self._wal is not None:
+            # Rotation keyed to the checkpoint step: the next mutation
+            # opens a fresh segment, so no segment straddles the boundary
+            # and GC can reason per whole segment.
+            self._wal.rotate()
+            covered = None
+            for s in self._ckpt.all_steps():
+                try:
+                    seq = int(self._ckpt.read_metadata(s).get("wal_seq", 0))
+                except Exception:
+                    seq = 0  # unreadable manifest: assume it covers nothing
+                covered = seq if covered is None else min(covered, seq)
+            if covered:
+                self._wal.gc(covered)
         return step
 
     def restore(self, step: Optional[int] = None) -> int:
@@ -855,16 +1273,92 @@ class GraphStream:
                 )
         if self._window is not None:
             self._window = state
+            # Re-sync the host ring-position mirror with the restored ring
+            # (the head-relative slot mapping depends on it).
+            self._ring_pos = int(np.asarray(state.current))
         else:
             self._sketch = state
         self._epoch = int(meta.get("epoch", meta["step"]))
+        if self._tracker is not None:
+            wm_state = meta.get("watermark")
+            if wm_state is not None:
+                self._tracker = WatermarkTracker.from_state(wm_state)
+                head = meta.get("head_slice")
+                self._head_slice = None if head is None else int(head)
+            else:
+                # Pre-event-time checkpoint: start the tracker fresh.
+                self._tracker = WatermarkTracker(self._tracker.max_lateness)
+                self._head_slice = None
+        subs_meta = meta.get("subs") or {}
+        for sub in self._subs.values():
+            m = subs_meta.get(self._sub_key(sub))
+            if m is not None:
+                sub.ticks = int(m["ticks"])
+                sub._mutations_pending = int(m["pending"])
         self.engine.invalidate()  # any cached closure predates the restore
         self._touched = []
         self._touched_count = 0
+        self._last_restore_meta = meta
         return int(meta["step"])
+
+    def recover(self, step: Optional[int] = None) -> RecoveryReport:
+        """Crash recovery (requires ``wal_dir``): restore the newest usable
+        checkpoint — falling back past a corrupt one, or starting from the
+        empty summary when none exists — then replay the WAL suffix through
+        the normal mutation path (no re-append).  Standing subscriptions
+        registered BEFORE calling this re-evaluate during replay exactly as
+        the pre-crash session did: ticks resume from the checkpointed
+        progress, and events a consumer already processed are deduplicated
+        by (subscription, tick) via :meth:`Subscription.seek` — together,
+        exactly-once delivery.  The post-recovery event sequence is
+        bit-identical to the uninterrupted run (property-tested)."""
+        if self._wal is None:
+            raise ValueError("open the session with wal_dir= to recover")
+        restored_step = None
+        after_seq = 0
+        if self._ckpt is not None:
+            try:
+                restored_step = self.restore(step)
+                after_seq = int(self._last_restore_meta.get("wal_seq", 0))
+            except FileNotFoundError:
+                restored_step = None  # genesis replay over the empty summary
+        self._replaying = True
+        replayed = 0
+        try:
+            for mut in self._wal.replay(after_seq=after_seq):
+                if isinstance(mut, EdgeMutation):
+                    self._ingest_encoded(
+                        mut.src, mut.dst, mut.weights, mut.timestamps,
+                        mut.source_key,
+                    )
+                elif isinstance(mut, AdvanceMutation):
+                    self.advance_window()
+                else:  # MergeMutation — state entered outside this log
+                    raise RuntimeError(
+                        f"WAL suffix crosses a merge barrier (seq {mut.seq}): "
+                        f"the merged-in summary never went through this log. "
+                        f"checkpoint() immediately after merge() so recovery "
+                        f"never needs to replay past it"
+                    )
+                replayed += 1
+        finally:
+            self._replaying = False
+        self.flush()
+        return RecoveryReport(
+            step=restored_step,
+            mutations_replayed=replayed,
+            epoch=self._epoch,
+            wal_seq=self._wal.last_seq,
+        )
 
     def summary(self) -> Dict[str, float]:
         """Flushed session stats — the only honest read of ingest throughput
         while ingest is double-buffered."""
         self.flush()
-        return self.stats.summary()
+        out = self.stats.summary()
+        out["events_dropped"] = self.events_dropped
+        if self._tracker is not None:
+            out["watermark"] = self._tracker.watermark
+            out["late_dropped"] = self._tracker.late_dropped
+            out["late_retracted"] = self._tracker.late_retracted
+        return out

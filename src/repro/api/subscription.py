@@ -27,16 +27,25 @@ threshold monitor (``GraphStream.monitor`` is a thin wrapper over one).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Callable, Iterator, List, Optional, Tuple
 
 from repro.api.planner import CompiledPlan
 from repro.api.query import QueryBatch, QueryResult
+from repro.stream.events import EventFeed
 
-# Events kept per subscription when nobody polls; beyond this the OLDEST
-# pending events drop (monitoring workloads care about the newest state).
+# Events kept per subscription when nobody polls; past this the overflow
+# policy applies (default drop_oldest — monitoring workloads care about
+# the newest state) and ``events_dropped`` counts the loss.
 DEFAULT_MAX_PENDING = 1024
+
+
+def sub_progress_key(sub: "Subscription") -> str:
+    """Stable identity for checkpointed subscription progress: named
+    subscriptions match by name across a process restart; anonymous ones
+    match by registration-order id (deterministic when the recovering
+    process re-subscribes in the same order)."""
+    return f"name:{sub.name}" if sub.name else f"id:{sub.id}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +88,7 @@ class Subscription:
         alarm: Optional[Callable[[List[QueryResult]], bool]] = None,
         name: Optional[str] = None,
         max_pending: int = DEFAULT_MAX_PENDING,
+        overflow: str = "drop_oldest",
     ):
         if len(batch) == 0:
             raise ValueError("a subscription needs at least one query")
@@ -97,16 +107,17 @@ class Subscription:
         self.active = True
         self.last_event: Optional[SubscriptionEvent] = None
         self._mutations_pending = 0
-        self._events: collections.deque = collections.deque(maxlen=max_pending)
+        self._events = EventFeed(max_pending, overflow)
+        # Exactly-once replay floor: events with tick <= _seen_tick were
+        # already consumed before a crash and are deduplicated on re-emit.
+        self._seen_tick = 0
+        self.events_deduped = 0
 
     # -- event plane ---------------------------------------------------------
 
     def poll(self, max_events: Optional[int] = None) -> List[SubscriptionEvent]:
         """Drain (up to ``max_events``) pending events, oldest first."""
-        out: List[SubscriptionEvent] = []
-        while self._events and (max_events is None or len(out) < max_events):
-            out.append(self._events.popleft())
-        return out
+        return self._events.drain(max_events)
 
     def __iter__(self) -> Iterator[SubscriptionEvent]:
         while self._events:
@@ -115,6 +126,19 @@ class Subscription:
     @property
     def pending(self) -> int:
         return len(self._events)
+
+    @property
+    def events_dropped(self) -> int:
+        """Pending events lost to queue overflow (monotone counter; the
+        explicit replacement for the old silent ``deque(maxlen)`` loss)."""
+        return self._events.dropped
+
+    def seek(self, tick: int) -> None:
+        """Exactly-once consumption floor: after :meth:`GraphStream.recover`
+        re-emits the replayed event stream, events with ``tick <=`` this
+        value are deduplicated (they were delivered before the crash).
+        Call with the last tick the consumer durably processed."""
+        self._seen_tick = max(self._seen_tick, int(tick))
 
     def cancel(self) -> None:
         """Deregister: no further evaluations or events (idempotent)."""
@@ -129,13 +153,21 @@ class Subscription:
         self._mutations_pending += 1
         return self._mutations_pending >= self.every
 
-    def _deliver(self, event: SubscriptionEvent) -> None:
+    def _deliver(self, event: SubscriptionEvent) -> bool:
+        """Accept one evaluation.  Returns False when the event was
+        deduplicated by the exactly-once floor (already consumed before a
+        crash) — progress counters still advance, but nothing is queued,
+        no callback fires, and the session feed skips it too."""
         self._mutations_pending = 0
         self.ticks = event.tick
+        if event.tick <= self._seen_tick:
+            self.events_deduped += 1
+            return False
         self.last_event = event
-        self._events.append(event)
+        self._events.push(event)
         if self.on_result is not None:
             self.on_result(event)
+        return True
 
     def __repr__(self) -> str:  # pragma: no cover — debugging sugar
         tag = f" {self.name!r}" if self.name else ""

@@ -21,11 +21,26 @@ import shutil
 import threading
 import time
 import uuid
+import warnings
+import zipfile
 from pathlib import Path
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed to load: truncated/corrupt shard or manifest.
+    Carries the offending ``step`` and ``path`` so the operator knows
+    exactly which artifact to quarantine."""
+
+    def __init__(self, step: int, path: Path, reason: str):
+        self.step = int(step)
+        self.path = Path(path)
+        super().__init__(
+            f"checkpoint step {step} is corrupt ({path}): {reason}"
+        )
 
 
 def _tree_paths(tree) -> list:
@@ -141,17 +156,77 @@ class CheckpointManager:
         before use (``GLavaSketch.with_counters`` rebuilds registers from
         counters).
 
+        A truncated or corrupt checkpoint raises
+        :class:`CheckpointCorruptError` naming the offending step and file.
+        When restoring the LATEST step (``step=None``), corruption falls
+        back to the previous retained step (with a warning) instead of
+        failing — an explicitly requested step never silently substitutes.
+
         Returns (state, metadata); ``metadata["step"]`` is always present,
         backed by the manifest's own step counter (callers never see None
         for the restored step)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        if step is not None:
+            return self._load_step(step, like, shardings, fill_missing)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        first_err: Optional[CheckpointCorruptError] = None
+        for s in reversed(steps):
+            try:
+                return self._load_step(s, like, shardings, fill_missing)
+            except CheckpointCorruptError as e:
+                if first_err is None:
+                    first_err = e
+                warnings.warn(
+                    f"{e} — falling back to the previous retained step",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        raise first_err
+
+    def read_metadata(self, step: int) -> dict:
+        """Load just a step's manifest metadata (plus ``step``) — no array
+        I/O.  The WAL GC path reads every retained checkpoint's durable
+        WAL position through this."""
         d = self.dir / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        data = np.load(d / "arrays.npz")
-        by_path = {e["path"]: data[e["key"]] for e in manifest["index"]}
+        mpath = d / "manifest.json"
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(step, mpath, f"unreadable manifest: {e}")
+        metadata = dict(manifest.get("metadata") or {})
+        if metadata.get("step") is None:
+            metadata["step"] = manifest.get("step", step)
+        return metadata
+
+    def _load_step(
+        self,
+        step: int,
+        like: Any = None,
+        shardings: Any = None,
+        fill_missing: bool = False,
+    ):
+        """Load one specific step; raises :class:`CheckpointCorruptError`
+        on a truncated/corrupt shard or manifest instead of surfacing a raw
+        deserialization error."""
+        d = self.dir / f"step_{step:010d}"
+        if not d.exists():
+            raise FileNotFoundError(f"no checkpoint for step {step} in {self.dir}")
+        mpath = d / "manifest.json"
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(step, mpath, f"unreadable manifest: {e}")
+        apath = d / "arrays.npz"
+        try:
+            data = np.load(apath)
+            # Force every indexed array off disk NOW: np.load is lazy, and a
+            # truncated zip member only fails when its entry is read.
+            by_path = {e["path"]: data[e["key"]] for e in manifest["index"]}
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            raise CheckpointCorruptError(
+                step, apath, f"truncated or corrupt shard: {e}"
+            )
         if like is None:
             raise ValueError("restore requires `like` for the tree structure")
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)

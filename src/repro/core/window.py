@@ -57,19 +57,25 @@ class SlidingWindowSketch:
         return self.slices.shape[0]
 
     def _active(self) -> GLavaSketch:
+        return self._active_at(self.current)
+
+    def _active_at(self, slot) -> GLavaSketch:
         return dataclasses.replace(
             self.template,
-            counters=self.slices[self.current],
-            row_flows=self.row_flows[self.current],
-            col_flows=self.col_flows[self.current],
+            counters=self.slices[slot],
+            row_flows=self.row_flows[slot],
+            col_flows=self.col_flows[slot],
         )
 
     def _store(self, active: GLavaSketch) -> "SlidingWindowSketch":
+        return self._store_at(self.current, active)
+
+    def _store_at(self, slot, active: GLavaSketch) -> "SlidingWindowSketch":
         return dataclasses.replace(
             self,
-            slices=self.slices.at[self.current].set(active.counters),
-            row_flows=self.row_flows.at[self.current].set(active.row_flows),
-            col_flows=self.col_flows.at[self.current].set(active.col_flows),
+            slices=self.slices.at[slot].set(active.counters),
+            row_flows=self.row_flows.at[slot].set(active.row_flows),
+            col_flows=self.col_flows.at[slot].set(active.col_flows),
         )
 
     def update(self, src, dst, weights=None, backend: str = "auto",
@@ -82,6 +88,18 @@ class SlidingWindowSketch:
             src, dst, weights, backend=backend, preagg=preagg
         )
         return self._store(active)
+
+    def update_at(self, slot, src, dst, weights=None,
+                  backend: str = "auto") -> "SlidingWindowSketch":
+        """Event-time ingest: fold a batch into an ARBITRARY ring slot (a
+        traced int32 index), not just the active slice — how late-but-in-
+        bound edges land in the slice their event time belongs to.  The
+        slot rides through the jit boundary as data, so one compiled
+        update serves every slice."""
+        active = self._active_at(slot).update(
+            src, dst, weights, backend=backend, preagg="off"
+        )
+        return self._store_at(slot, active)
 
     def update_preaggregated(self, *args, **kwargs) -> "SlidingWindowSketch":
         """Host-collapsed ingest into the active slice — the session fast

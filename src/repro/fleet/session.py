@@ -30,6 +30,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import shutil
 import time
 from pathlib import Path
 from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
@@ -44,6 +46,7 @@ from repro.api.query import Query, QueryBatch, QueryResult, validate_theta
 from repro.api.stream import (
     EVENT_LOG_MAXLEN,
     IngestReceipt,
+    RecoveryReport,
     StreamStats,
     _preset,
 )
@@ -51,6 +54,7 @@ from repro.api.subscription import (
     DEFAULT_MAX_PENDING,
     Subscription,
     SubscriptionEvent,
+    sub_progress_key,
 )
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.hashing import fnv1a_label
@@ -59,6 +63,24 @@ from repro.core.sketch import GLavaSketch, SketchConfig
 from repro.fleet.ingest import FleetIngestEngine, group_stream, pad_grouped
 from repro.fleet.query import FleetQueryEngine
 from repro.fleet.stack import FleetSketch
+from repro.stream.events import EventFeed
+from repro.stream.wal import (
+    AdvanceMutation,
+    EdgeMutation,
+    MergeMutation,
+    WriteAheadLog,
+)
+
+
+def _tenant_dirname(tenant_id) -> str:
+    """Filesystem-safe, collision-safe directory name for one tenant:
+    a sanitized prefix of the id for operators plus its FNV-1a hash so
+    distinct ids that sanitize alike never share a shard/WAL directory."""
+    safe = "".join(
+        ch if ch.isalnum() or ch in "._-" else "_"
+        for ch in str(tenant_id)[:40]
+    )
+    return f"{safe}-{fnv1a_label(tenant_id):08x}"
 
 
 @dataclasses.dataclass
@@ -147,9 +169,7 @@ class TenantSession:
         self._epoch = 0
         self._subs: Dict[int, Subscription] = {}
         self._next_sub_id = 0
-        self._event_log: collections.deque = collections.deque(
-            maxlen=EVENT_LOG_MAXLEN
-        )
+        self._event_log = EventFeed(EVENT_LOG_MAXLEN, fleet._events_policy)
         self._touched: Optional[list] = []
         self._touched_count = 0
         self._closed = False
@@ -190,19 +210,23 @@ class TenantSession:
 
     # -- ingest ---------------------------------------------------------------
 
-    def ingest(self, src, dst, weights=None) -> IngestReceipt:
+    def ingest(self, src, dst, weights=None, *, timestamps=None) -> IngestReceipt:
         """Fold one edge batch into THIS tenant's summary — delegates to
         the fleet's mixed-stream hot path with a constant tenant lane."""
-        receipts = self._fleet.ingest_mixed(self.tenant_id, src, dst, weights)
+        receipts = self._fleet.ingest_mixed(
+            self.tenant_id, src, dst, weights, timestamps=timestamps
+        )
         return receipts[self.tenant_id]
 
-    def delete(self, src, dst, weights=None) -> IngestReceipt:
+    def delete(self, src, dst, weights=None, *, timestamps=None) -> IngestReceipt:
         """Turnstile deletion (negative-weight ingest) for this tenant."""
         if weights is None:
             weights = np.ones(
                 len(np.atleast_1d(np.asarray(src))), np.float32
             )
-        return self.ingest(src, dst, -np.asarray(weights))
+        return self.ingest(
+            src, dst, -np.asarray(weights), timestamps=timestamps
+        )
 
     def flush(self) -> None:
         self._fleet.flush()
@@ -215,6 +239,8 @@ class TenantSession:
             return
         self._touch()
         fleet = self._fleet
+        if fleet._wal_dir is not None and not fleet._replaying:
+            fleet._wal_lane(self.tenant_id).append_advance()
         fleet.flush()
         fleet._state = fleet._state.advance(self._slot)
         self._epoch += 1
@@ -312,6 +338,11 @@ class TenantSession:
         while self._event_log:
             yield self._event_log.popleft()
 
+    @property
+    def events_dropped(self) -> int:
+        """Events lost from this tenant's feed to queue overflow."""
+        return self._event_log.dropped
+
     def _unsubscribe(self, sub: Subscription) -> None:
         self._subs.pop(sub.id, None)
         if sub.plan.has_reach and self._slot is not None:
@@ -366,6 +397,18 @@ class TenantSession:
         for sub in list(self._subs.values()):
             sub.cancel()
         fleet = self._fleet
+        if fleet._wal_dir is not None:
+            # Forgetting the tenant forgets its durable log too — a kept
+            # lane would resurrect this tenant (or pollute a fresh one
+            # under the same id) on the next recover().
+            lane = fleet._wal_lanes.pop(self.tenant_id, None)
+            if lane is not None:
+                lane.close()
+            if isinstance(self.tenant_id, (str, int, np.integer)):
+                shutil.rmtree(
+                    Path(fleet._wal_dir) / _tenant_dirname(self.tenant_id),
+                    ignore_errors=True,
+                )
         if self._slot is not None:
             fleet.flush()
             fleet.engine.drop_closure(self._slot)
@@ -394,6 +437,9 @@ class SketchFleet:
         checkpoint_dir: Optional[str] = None,
         max_inflight: int = 2,
         pad_q: Optional[int] = None,
+        wal_dir: Optional[str] = None,
+        wal_fsync_every: int = 1,
+        events_policy: str = "drop_oldest",
     ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -416,9 +462,12 @@ class SketchFleet:
         self._ckpt_dir = checkpoint_dir
         self._max_inflight = max_inflight
         self._inflight: collections.deque = collections.deque()
-        self._event_log: collections.deque = collections.deque(
-            maxlen=EVENT_LOG_MAXLEN
-        )
+        self._events_policy = events_policy
+        self._event_log = EventFeed(EVENT_LOG_MAXLEN, events_policy)
+        self._wal_dir = wal_dir
+        self._wal_fsync_every = int(wal_fsync_every)
+        self._wal_lanes: Dict = {}
+        self._replaying = False
         self.stats = FleetStats()
 
     @classmethod
@@ -477,6 +526,11 @@ class SketchFleet:
         while self._event_log:
             yield self._event_log.popleft()
 
+    @property
+    def events_dropped(self) -> int:
+        """Events lost from the fleet-wide feed to queue overflow."""
+        return self._event_log.dropped
+
     def _admit(self, sess: TenantSession) -> None:
         slot = self._free.pop() if self._free else self._evict_coldest()
         sess._slot = slot
@@ -498,15 +552,34 @@ class SketchFleet:
         tenant_id, sess = next(iter(self._resident.items()))
         self.flush()
         mgr = self._shard_manager(tenant_id)
-        mgr.save(
-            sess._epoch,
-            self._state.tenant_shard(sess._slot),
-            metadata={
-                "epoch": sess._epoch,
-                "edges_ingested": sess.stats.edges_ingested,
-            },
-        )
+        meta = {
+            "epoch": sess._epoch,
+            "edges_ingested": sess.stats.edges_ingested,
+        }
+        lane = None
+        if self._wal_dir is not None:
+            # Valid even mid-recovery: an evictable tenant has fully
+            # replayed, so its state reflects everything in its lane.
+            lane = self._wal_lane(tenant_id)
+            lane.sync()
+            meta["wal_seq"] = lane.last_seq
+        if sess._subs:
+            meta["subs"] = {
+                sub_progress_key(sub): {
+                    "ticks": sub.ticks,
+                    "pending": sub._mutations_pending,
+                }
+                for sub in sess._subs.values()
+                if sub.active
+            }
+        mgr.save(sess._epoch, self._state.tenant_shard(sess._slot), metadata=meta)
         sess._shard_step = sess._epoch
+        if lane is not None:
+            # The shard is durable: records at or below its wal_seq are
+            # covered, so rotate and drop fully-covered segments (keep=1 —
+            # this shard is the only restore point).
+            lane.rotate()
+            lane.gc(int(meta["wal_seq"]))
         slot = sess._slot
         self._state = self._state.clear_tenant(slot)
         self.engine.drop_closure(slot)
@@ -533,18 +606,127 @@ class SketchFleet:
         sess._epoch = int(meta.get("epoch", meta["step"]))
 
     def _shard_manager(self, tenant_id) -> CheckpointManager:
-        safe = "".join(
-            ch if ch.isalnum() or ch in "._-" else "_"
-            for ch in str(tenant_id)[:40]
-        )
-        name = f"{safe}-{fnv1a_label(tenant_id):08x}"
         return CheckpointManager(
-            Path(self._ckpt_dir) / "tenants" / name, keep=1
+            Path(self._ckpt_dir) / "tenants" / _tenant_dirname(tenant_id),
+            keep=1,
         )
+
+    # -- per-tenant WAL lanes --------------------------------------------------
+
+    def _wal_lane(self, tenant_id) -> WriteAheadLog:
+        """This tenant's write-ahead-log lane (opened lazily).  Lane
+        directories are keyed by the same collision-safe name as eviction
+        shards; ``tenant.json`` records the original id so
+        :meth:`recover` can re-open sessions from disk alone."""
+        lane = self._wal_lanes.get(tenant_id)
+        if lane is None:
+            if not isinstance(tenant_id, (str, int, np.integer)):
+                raise TypeError(
+                    "WAL lanes need str/int tenant ids (stored in "
+                    f"tenant.json for recovery), got {type(tenant_id).__name__}"
+                )
+            lane_dir = Path(self._wal_dir) / _tenant_dirname(tenant_id)
+            lane = WriteAheadLog(lane_dir, fsync_every=self._wal_fsync_every)
+            ident = lane_dir / "tenant.json"
+            if not ident.exists():
+                ident.write_text(json.dumps({"tenant_id": tenant_id}))
+            self._wal_lanes[tenant_id] = lane
+        return lane
+
+    def _wal_append(self, sess, s_np, d_np, w_np, ts_np) -> Optional[int]:
+        """Durably log one tenant's slice of an arrival batch BEFORE its
+        device dispatch; returns the commit seq (None when WAL is off or
+        this ingest is itself a replay)."""
+        if self._wal_dir is None or self._replaying:
+            return None
+        return self._wal_lane(sess.tenant_id).append_edges(
+            s_np, d_np, w_np, timestamps=ts_np
+        )
+
+    def recover(self) -> Dict:
+        """Crash recovery for a freshly opened fleet (requires ``wal_dir``):
+        for every WAL lane on disk, re-open its tenant (``tenant.json``
+        names the id), fault in the newest eviction shard if one exists,
+        and replay the lane's suffix — records past the shard's durable
+        ``wal_seq`` — through the normal mixed-ingest path.
+
+        Re-register standing subscriptions BEFORE calling this (matched by
+        name, or registration order for anonymous ones) and ``seek()`` each
+        to its last consumed tick so the replayed event stream deduplicates
+        exactly-once.  Returns ``{tenant_id: RecoveryReport}``."""
+        if self._wal_dir is None:
+            raise ValueError("recover() requires wal_dir=")
+        root = Path(self._wal_dir)
+        reports: Dict = {}
+        lane_dirs = sorted(root.iterdir()) if root.exists() else []
+        for lane_dir in lane_dirs:
+            ident = lane_dir / "tenant.json"
+            if not ident.exists():
+                continue
+            tenant_id = json.loads(ident.read_text())["tenant_id"]
+            after_seq = 0
+            step = None
+            shard_meta: Dict = {}
+            if self._ckpt_dir is not None:
+                mgr = self._shard_manager(tenant_id)
+                step = mgr.latest_step()
+                if step is not None:
+                    shard_meta = mgr.read_metadata(step)
+                    after_seq = int(shard_meta.get("wal_seq", 0))
+                    sess = self._sessions.get(tenant_id)
+                    if sess is None:
+                        sess = TenantSession(self, tenant_id)
+                        self._sessions[tenant_id] = sess
+                    if sess._slot is None:
+                        # Fault the shard in through the normal admission
+                        # path instead of replaying from genesis.
+                        sess._shard_step = step
+            sess = self.tenant(tenant_id)
+            subs_meta = shard_meta.get("subs") or {}
+            for sub in sess._subs.values():
+                m = subs_meta.get(sub_progress_key(sub))
+                if m is not None:
+                    sub.ticks = int(m["ticks"])
+                    sub._mutations_pending = int(m["pending"])
+            lane = self._wal_lane(tenant_id)
+            replayed = 0
+            self._replaying = True
+            try:
+                for mut in lane.replay(after_seq=after_seq):
+                    if isinstance(mut, EdgeMutation):
+                        self.ingest_mixed(
+                            tenant_id,
+                            mut.src,
+                            mut.dst,
+                            mut.weights,
+                            timestamps=mut.timestamps,
+                        )
+                    elif isinstance(mut, AdvanceMutation):
+                        sess.advance_window()
+                    elif isinstance(mut, MergeMutation):
+                        raise RuntimeError(
+                            "WAL contains a merge barrier past the last "
+                            "eviction shard — merged state cannot be "
+                            "replayed from edge records; evict or "
+                            "checkpoint tenants immediately after merging"
+                        )
+                    replayed += 1
+            finally:
+                self._replaying = False
+            reports[tenant_id] = RecoveryReport(
+                step=step,
+                mutations_replayed=replayed,
+                epoch=sess._epoch,
+                wal_seq=lane.last_seq,
+            )
+        self.flush()
+        return reports
 
     # -- the fleet hot path ----------------------------------------------------
 
-    def ingest_mixed(self, tenant_ids, src, dst, weights=None) -> Dict:
+    def ingest_mixed(
+        self, tenant_ids, src, dst, weights=None, *, timestamps=None
+    ) -> Dict:
         """Fold one MIXED arrival stream — ``(tenant_id, src, dst, weight)``
         records — into the whole fleet in ONE donated device dispatch.
 
@@ -555,7 +737,11 @@ class SketchFleet:
         A batch spanning more distinct tenants than the fleet has slots is
         split into capacity-sized tenant groups, one dispatch per group, so
         LRU admission can never evict a tenant an in-flight group still
-        routes to.  Returns ``{tenant_id: IngestReceipt}``."""
+        routes to.  Returns ``{tenant_id: IngestReceipt}``.
+
+        ``timestamps`` (optional per-edge event times) are recorded in
+        each tenant's WAL lane — the fleet plane does not window by event
+        time, but replay hands them back so a later fault-in can."""
         t0 = time.time()
         s_np = np.atleast_1d(encode_labels(src))
         d_np = np.atleast_1d(encode_labels(dst))
@@ -573,13 +759,25 @@ class SketchFleet:
             raise ValueError(
                 f"weights/src shape mismatch: {w_np.shape} vs {(n_edges,)}"
             )
+        ts_np = None
+        if timestamps is not None:
+            ts_np = np.atleast_1d(np.asarray(timestamps, np.float64))
+            if ts_np.shape != (n_edges,):
+                raise ValueError(
+                    f"timestamps/src shape mismatch: {ts_np.shape} vs "
+                    f"{(n_edges,)}"
+                )
+            if not np.all(np.isfinite(ts_np)):
+                raise ValueError("timestamps must be finite")
         additive = weights is None or not bool(np.any(w_np < 0))
 
         if isinstance(tenant_ids, (str, bytes, int, np.integer)):
             sess = self.tenant(tenant_ids)
+            wal_seqs = {id(sess): self._wal_append(sess, s_np, d_np, w_np, ts_np)}
             slot_np = np.full(n_edges, sess._slot, np.int32)
             return self._dispatch_group(
-                [(sess, 0, n_edges)], slot_np, s_np, d_np, w_np, additive, t0
+                [(sess, 0, n_edges)], slot_np, s_np, d_np, w_np, additive,
+                t0, wal_seqs,
             )
         ids = np.asarray(tenant_ids)
         if ids.shape[0] != n_edges:
@@ -589,7 +787,7 @@ class SketchFleet:
         uniq_ids, inverse = np.unique(ids, return_inverse=True)
         if uniq_ids.shape[0] <= self.capacity:
             return self._route_group(
-                uniq_ids, inverse, s_np, d_np, w_np, additive, t0
+                uniq_ids, inverse, s_np, d_np, w_np, ts_np, additive, t0
             )
         # More distinct tenants than slots: admitted one at a time, this
         # batch's own tenants would evict each other before the slot lane
@@ -607,6 +805,7 @@ class SketchFleet:
                     s_np[pick],
                     d_np[pick],
                     w_np[pick],
+                    None if ts_np is None else ts_np[pick],
                     additive,
                     time.time(),
                 )
@@ -614,7 +813,7 @@ class SketchFleet:
         return receipts
 
     def _route_group(
-        self, uniq_ids, inverse, s_np, d_np, w_np, additive, t0
+        self, uniq_ids, inverse, s_np, d_np, w_np, ts_np, additive, t0
     ) -> Dict:
         """Admit one group of at most ``capacity`` distinct tenants and
         dispatch its edges.  The cap guarantees the admission loop cannot
@@ -622,6 +821,19 @@ class SketchFleet:
         at most ``capacity - k`` evictions remain after the k-th touch), so
         every edge routes to a live slot."""
         sessions = [self.tenant(t) for t in uniq_ids.tolist()]
+        # Log each tenant's slice in arrival order BEFORE the dispatch (and
+        # before grouping permutes the arrays) — the WAL is the authority
+        # on what the device state is allowed to contain.
+        wal_seqs: Dict[int, Optional[int]] = {}
+        for k, sess in enumerate(sessions):
+            mask = inverse == k
+            wal_seqs[id(sess)] = self._wal_append(
+                sess,
+                s_np[mask],
+                d_np[mask],
+                w_np[mask],
+                None if ts_np is None else ts_np[mask],
+            )
         slot_np = np.asarray(
             [s._slot for s in sessions], np.int32
         )[inverse]
@@ -634,15 +846,16 @@ class SketchFleet:
             for sl, st, ct in zip(uniq_slots, starts, counts)
         ]
         return self._dispatch_group(
-            segments, slot_np, s_np, d_np, w_np, additive, t0
+            segments, slot_np, s_np, d_np, w_np, additive, t0, wal_seqs
         )
 
     def _dispatch_group(
-        self, segments, slot_np, s_np, d_np, w_np, additive, t0
+        self, segments, slot_np, s_np, d_np, w_np, additive, t0, wal_seqs=None
     ) -> Dict:
         """One grouped, padded, donated device dispatch + its bookkeeping
         (touched-key deltas, receipts, stats, subscription ticks)."""
         n_edges = int(s_np.shape[0])
+        wal_seqs = wal_seqs or {}
         # Per-tenant touched-key deltas (feeds each tenant's incremental
         # closure refresh) — only while that tenant's tracking is live.
         deltas: Dict[int, Optional[np.ndarray]] = {}
@@ -676,6 +889,7 @@ class SketchFleet:
                 epoch=sess._epoch,
                 n_edges=ct,
                 touched_keys=deltas.get(id(sess)) if additive else None,
+                wal_seq=wal_seqs.get(id(sess)),
             )
         self.stats.edges_ingested += n_edges
         self.stats.batches += 1
@@ -736,9 +950,9 @@ class SketchFleet:
                 results=tuple(results),
                 alarm=None if sub.alarm is None else bool(sub.alarm(results)),
             )
-            sub._deliver(event)
-            sess._event_log.append(event)
-            self._event_log.append(event)
+            if sub._deliver(event):
+                sess._event_log.push(event)
+                self._event_log.push(event)
             sess.stats.subscription_ticks += 1
             self.stats.subscription_ticks += 1
             sess._count_served(results)
@@ -753,6 +967,7 @@ class SketchFleet:
             tenants=len(self._sessions),
             resident=len(self._resident),
             capacity=self.capacity,
+            events_dropped=self._event_log.dropped,
             ingest_dispatches=self._ingest.dispatches,
             closure_builds=self.engine.closure_builds,
             closure_incremental_refreshes=(

@@ -57,6 +57,26 @@ def main():
         default=0,
         help="serve T tenants as one SketchFleet (0 = single session)",
     )
+    ap.add_argument(
+        "--wal-dir",
+        default=None,
+        help="write-ahead-log directory: every batch is durably logged "
+        "before its device dispatch (per-tenant lanes in fleet mode)",
+    )
+    ap.add_argument(
+        "--slice-width",
+        type=float,
+        default=0.0,
+        help="event-time slice width: with --window-slices, the stream "
+        "carries per-edge timestamps and the watermark drives advances",
+    )
+    ap.add_argument(
+        "--max-lateness",
+        type=float,
+        default=0.0,
+        help="bounded out-of-orderness: edges older than the watermark "
+        "minus this are late (retracted via the turnstile-delete path)",
+    )
     args = ap.parse_args()
 
     cfg = SketchConfig(depth=args.depth, width_rows=args.width, width_cols=args.width)
@@ -67,9 +87,22 @@ def main():
         window_slices=args.window_slices or None,
         ingest_backend=args.ingest_backend,
         query_backend=args.query_backend,
+        wal_dir=args.wal_dir,
+        slice_width=args.slice_width or None,
+        max_lateness=args.max_lateness if args.slice_width else None,
     )
     rng = np.random.default_rng(0)
     data = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)
+    ts_all = None
+    if args.slice_width:
+        # Synthetic event time: one slice per ingest batch, with bounded
+        # out-of-orderness (uniform lag within --max-lateness) so the
+        # watermark path and late routing are actually exercised.
+        base = np.arange(args.edges, dtype=np.float64) * (
+            args.slice_width / args.batch
+        )
+        ts_all = base - rng.uniform(0.0, max(args.max_lateness, 0.0), args.edges)
+        ts_all = np.maximum(ts_all, 0.0)
 
     # The monitoring workload is STANDING: the same mixed batch re-asked
     # after every ingest batch.  Register it once — the planner compiles it
@@ -90,7 +123,10 @@ def main():
     for lo in range(0, args.edges, args.batch):
         hi = min(args.edges, lo + args.batch)
         stream.ingest(
-            data["src"][lo:hi], data["dst"][lo:hi], data["weight"][lo:hi]
+            data["src"][lo:hi],
+            data["dst"][lo:hi],
+            data["weight"][lo:hi],
+            timestamps=None if ts_all is None else ts_all[lo:hi],
         )
 
     ticks = sub.poll()
@@ -111,6 +147,7 @@ def _serve_fleet(cfg: SketchConfig, args) -> None:
         cfg,
         capacity=args.tenants,
         window_slices=args.window_slices or None,
+        wal_dir=args.wal_dir,
     )
     rng = np.random.default_rng(0)
     data = edge_stream(args.nodes, args.edges, rng, zipf_a=1.2)

@@ -46,6 +46,10 @@ class SketchServer:
         max_inflight: int = 2,
         tenants: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
+        wal_dir: Optional[str] = None,
+        slice_width: Optional[float] = None,
+        max_lateness: Optional[float] = None,
+        late_policy: str = "retract",
     ):
         """``tenants=N`` opens the server in MULTI-SESSION (fleet) mode:
         one :class:`repro.fleet.SketchFleet` with N resident slots serves
@@ -54,8 +58,22 @@ class SketchServer:
         exposes the per-tenant session surface, and :meth:`ingest_mixed`
         is the mixed-stream hot path.  ``checkpoint_dir`` enables LRU
         eviction of cold tenants to host shards (and, single-session mode,
-        plain session checkpointing)."""
+        plain session checkpointing).
+
+        ``wal_dir`` makes ingest durable (write-ahead-logged before every
+        device dispatch; :meth:`recover` replays the suffix after a
+        crash).  ``slice_width``/``max_lateness`` switch the single
+        session to event-time windowing — ingest then requires per-edge
+        ``timestamps`` and the watermark drives window advances (the
+        fleet plane records event times in its WAL lanes but does not
+        window by them, so those knobs are single-session only)."""
         if tenants is not None:
+            if slice_width is not None or max_lateness is not None:
+                raise ValueError(
+                    "event-time windowing (slice_width/max_lateness) is "
+                    "single-session only; fleet WAL lanes record event "
+                    "times but tenants window by explicit advance_window()"
+                )
             from repro.fleet import SketchFleet
 
             self.fleet: Optional["SketchFleet"] = SketchFleet.open(
@@ -65,6 +83,7 @@ class SketchServer:
                 window_slices=window_slices,
                 checkpoint_dir=checkpoint_dir,
                 max_inflight=max_inflight,
+                wal_dir=wal_dir,
             )
             self.stream = None
         else:
@@ -78,6 +97,10 @@ class SketchServer:
                 double_buffer=double_buffer,
                 max_inflight=max_inflight,
                 checkpoint_dir=checkpoint_dir,
+                wal_dir=wal_dir,
+                slice_width=slice_width,
+                max_lateness=max_lateness,
+                late_policy=late_policy,
             )
 
     def _session(self, tenant=None):
@@ -104,14 +127,16 @@ class SketchServer:
             raise ValueError("tenant() requires a fleet server (tenants=N)")
         return self.fleet.tenant(tenant_id)
 
-    def ingest_mixed(self, tenant_ids, src, dst, weights=None):
+    def ingest_mixed(self, tenant_ids, src, dst, weights=None, *, timestamps=None):
         """One mixed multi-tenant arrival batch -> one device dispatch
         (fleet mode only)."""
         if self.fleet is None:
             raise ValueError(
                 "ingest_mixed() requires a fleet server (tenants=N)"
             )
-        return self.fleet.ingest_mixed(tenant_ids, src, dst, weights)
+        return self.fleet.ingest_mixed(
+            tenant_ids, src, dst, weights, timestamps=timestamps
+        )
 
     @property
     def stats(self):
@@ -123,10 +148,17 @@ class SketchServer:
 
     # -- ingest ---------------------------------------------------------------
 
-    def ingest(self, src, dst, weights=None, tenant=None):
+    def ingest(self, src, dst, weights=None, tenant=None, *, timestamps=None):
         """Dispatch one edge batch; returns as soon as the device accepts it
         (call :meth:`flush` / any query to synchronize)."""
-        self._session(tenant).ingest(src, dst, weights)
+        self._session(tenant).ingest(src, dst, weights, timestamps=timestamps)
+
+    def recover(self):
+        """Crash recovery (requires ``wal_dir``): restore the newest
+        checkpoint/shards and replay the WAL suffix — see
+        :meth:`repro.api.GraphStream.recover` /
+        :meth:`repro.fleet.SketchFleet.recover`."""
+        return (self.stream if self.fleet is None else self.fleet).recover()
 
     def flush(self):
         """Block until every dispatched ingest batch has landed on device."""

@@ -1,0 +1,58 @@
+"""Event-time stream plane: watermarks, WAL durability, backpressure.
+
+The paper's streams are high-volume and *dynamic* — edges arrive late and
+out of order, and the turnstile model (Section 6.1.1) exists precisely so
+a summary can absorb corrections.  This package supplies the host-side
+machinery that turns the arrival-ordered session facade
+(:class:`repro.api.stream.GraphStream`) into an event-time system:
+
+- :mod:`repro.stream.watermark` — per-source low-watermark tracking with
+  bounded out-of-orderness (``max_lateness``) plus the slice arithmetic
+  that maps event times onto the sliding-window ring.
+- :mod:`repro.stream.wal` — an append-only segmented write-ahead log of
+  fixed-size binary records.  Every logical mutation is appended *before*
+  the donated device dispatch, so a crash can always be replayed from the
+  newest checkpoint.
+- :mod:`repro.stream.events` — the bounded event feed with an explicit
+  overflow policy (``drop_oldest`` / ``drop_newest`` / ``error``) and a
+  dropped-events counter, replacing silent ``deque(maxlen=...)`` loss.
+
+Everything here is deliberately host-side (numpy + stdlib, no jax): the
+jit boundaries stay in ``repro.api.stream`` where the donation contracts
+are registered, and this package stays importable in a process that never
+touches an accelerator (e.g. a WAL inspection tool).
+"""
+from repro.stream.events import (
+    OVERFLOW_POLICIES,
+    EventFeed,
+    EventOverflowError,
+)
+from repro.stream.wal import (
+    OP_ADVANCE,
+    OP_COMMIT,
+    OP_EDGE,
+    OP_MERGE,
+    WAL_RECORD,
+    AdvanceMutation,
+    EdgeMutation,
+    MergeMutation,
+    WriteAheadLog,
+)
+from repro.stream.watermark import WatermarkTracker, slice_of
+
+__all__ = [
+    "OVERFLOW_POLICIES",
+    "EventFeed",
+    "EventOverflowError",
+    "OP_ADVANCE",
+    "OP_COMMIT",
+    "OP_EDGE",
+    "OP_MERGE",
+    "WAL_RECORD",
+    "AdvanceMutation",
+    "EdgeMutation",
+    "MergeMutation",
+    "WriteAheadLog",
+    "WatermarkTracker",
+    "slice_of",
+]

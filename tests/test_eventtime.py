@@ -1,0 +1,658 @@
+"""Event-time stream plane tests: watermarks (bounded out-of-orderness,
+per-source low-watermark merge, state roundtrip), the segmented
+write-ahead log (roundtrip, suffix replay, torn-tail tolerance, rotation
++ checkpoint-keyed GC), exactly-once subscription replay (fault injection
+at every batch boundary — crash, ``recover()``, and the event transcript
+is bit-identical to the uninterrupted run), out-of-order-within-lateness
+bit-identity, late-edge policies via the turnstile-delete path,
+backpressure overflow policies, corrupt-checkpoint fallback, and the
+fleet's per-tenant WAL lanes."""
+import math
+import os
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (
+    GraphStream,
+    Query,
+    RecoveryReport,
+    SketchConfig,
+)
+from repro.checkpoint.manager import CheckpointCorruptError, CheckpointManager
+from repro.stream.events import EventFeed, EventOverflowError
+from repro.stream.wal import (
+    AdvanceMutation,
+    EdgeMutation,
+    MergeMutation,
+    WriteAheadLog,
+)
+from repro.stream.watermark import WatermarkTracker, slice_of, slices_of
+
+CFG = SketchConfig(depth=2, width_rows=64, width_cols=64)
+
+
+def _open(**kw):
+    kw.setdefault("ingest_backend", "scatter")
+    kw.setdefault("query_backend", "jnp")
+    return GraphStream.open(CFG, **kw)
+
+
+def _counters(gs):
+    """Window state in HEAD-RELATIVE (canonical) slot order.
+
+    The raw arrays are ring-slot indexed, and the ring's alignment is a
+    representation detail: two runs of the same logical stream can start
+    their heads at different slices (the first batch's max event time
+    picks the initial head) and so rotate the ring a different number of
+    times while holding identical per-slice content.  Queries aggregate
+    over the slice axis, so only the head-relative view is semantic.
+    """
+    gs.flush()
+    w = gs._window
+    slices = np.asarray(w.slices)
+    rows = np.asarray(w.row_flows)
+    cols = np.asarray(w.col_flows)
+    head = getattr(gs, "_head_slice", None)
+    if head is not None:
+        K = w.n_slices
+        slot_off = (gs._ring_pos - head) % K
+        order = [(head - K + 1 + rel + slot_off) % K for rel in range(K)]
+        slices, rows, cols = slices[order], rows[order], cols[order]
+    return (slices, rows, cols, head if head is not None else int(w.current))
+
+
+# ---------------------------------------------------------------------------
+# watermark tracker
+# ---------------------------------------------------------------------------
+
+
+def test_slice_of():
+    assert slice_of(0.0, 1.0) == 0
+    assert slice_of(2.999, 1.0) == 2
+    assert slice_of(-0.5, 1.0) == -1
+    np.testing.assert_array_equal(
+        slices_of(np.array([0.0, 1.5, 7.99]), 2.0), [0, 0, 3]
+    )
+
+
+def test_watermark_min_over_sources_and_monotone():
+    t = WatermarkTracker(max_lateness=2.0)
+    assert t.watermark == -math.inf
+    assert t.observe(0, 10.0) == 8.0
+    # a second, lagging source pulls the MIN down, but W never regresses
+    assert t.observe(1, 5.0) == 8.0
+    # the laggard catching up is what moves W now
+    assert t.observe(1, 20.0) == 8.0  # min is still source 0 at 10
+    assert t.observe(0, 30.0) == 18.0  # min(30, 20) - 2
+    assert t.sources == {0: 30.0, 1: 20.0}
+
+
+def test_watermark_rejects_bad_input():
+    with pytest.raises(ValueError):
+        WatermarkTracker(max_lateness=-1.0)
+    with pytest.raises(ValueError):
+        WatermarkTracker(max_lateness=math.inf)
+    t = WatermarkTracker(1.0)
+    with pytest.raises(ValueError):
+        t.observe(0, math.nan)
+
+
+def test_watermark_state_roundtrip():
+    t = WatermarkTracker(1.5)
+    t.observe(3, 7.0)
+    t.observe(4, 9.0)
+    t.late_dropped = 2
+    t.late_retracted = 5
+    t2 = WatermarkTracker.from_state(t.state())
+    assert t2.watermark == t.watermark
+    assert t2.sources == t.sources
+    assert (t2.late_dropped, t2.late_retracted) == (2, 5)
+    # fresh tracker (no observations) survives the None watermark encoding
+    t3 = WatermarkTracker.from_state(WatermarkTracker(1.5).state())
+    assert t3.watermark == -math.inf
+
+
+# ---------------------------------------------------------------------------
+# write-ahead log
+# ---------------------------------------------------------------------------
+
+
+def _edges(rng, n=8):
+    return (
+        rng.integers(0, 100, n).astype(np.uint32),
+        rng.integers(0, 100, n).astype(np.uint32),
+        rng.random(n).astype(np.float32),
+    )
+
+
+def test_wal_roundtrip_and_suffix_replay(tmp_path):
+    rng = np.random.default_rng(0)
+    wal = WriteAheadLog(tmp_path)
+    s1, d1, w1 = _edges(rng)
+    seq1 = wal.append_edges(s1, d1, w1, timestamps=np.arange(8.0))
+    wal.append_advance()
+    s2, d2, w2 = _edges(rng, 5)
+    wal.append_edges(s2, d2, w2)
+    wal.close()
+
+    muts = list(WriteAheadLog(tmp_path).replay())
+    assert [type(m) for m in muts] == [EdgeMutation, AdvanceMutation, EdgeMutation]
+    np.testing.assert_array_equal(muts[0].src, s1)
+    np.testing.assert_array_equal(muts[0].dst, d1)
+    np.testing.assert_array_equal(muts[0].weights, w1)
+    np.testing.assert_array_equal(muts[0].timestamps, np.arange(8.0))
+    assert muts[2].timestamps is None
+    np.testing.assert_array_equal(muts[2].weights, w2)
+    # suffix replay: everything after the first commit
+    suffix = list(WriteAheadLog(tmp_path).replay(after_seq=seq1))
+    assert [type(m) for m in suffix] == [AdvanceMutation, EdgeMutation]
+
+
+def test_wal_reopen_continues_sequence(tmp_path):
+    rng = np.random.default_rng(1)
+    wal = WriteAheadLog(tmp_path)
+    wal.append_edges(*_edges(rng))
+    first = wal.last_seq
+    wal.close()
+    wal2 = WriteAheadLog(tmp_path)
+    wal2.append_edges(*_edges(rng))
+    assert wal2.last_seq > first
+    seqs = [m.seq for m in wal2.replay()]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_wal_torn_tail_is_dropped(tmp_path):
+    rng = np.random.default_rng(2)
+    wal = WriteAheadLog(tmp_path)
+    wal.append_edges(*_edges(rng))
+    wal.append_edges(*_edges(rng, 4))
+    wal.close()
+    seg = sorted(tmp_path.glob("wal-*.seg"))[-1]
+    # Chop mid-record: the torn record AND its uncommitted edge run drop.
+    data = seg.read_bytes()
+    seg.write_bytes(data[: len(data) - 13])
+    muts = list(WriteAheadLog(tmp_path).replay())
+    assert len(muts) == 1  # only the first committed batch survives
+    # and a fresh append after reopen keeps sequence numbers consistent
+    wal3 = WriteAheadLog(tmp_path)
+    wal3.append_edges(*_edges(rng, 3))
+    muts = list(wal3.replay())
+    assert len(muts) == 2
+
+
+def test_wal_rotation_and_gc(tmp_path):
+    rng = np.random.default_rng(3)
+    wal = WriteAheadLog(tmp_path)
+    wal.append_edges(*_edges(rng))
+    covered = wal.last_seq
+    wal.rotate()
+    wal.append_edges(*_edges(rng))
+    assert len(wal.segments()) == 2
+    removed = wal.gc(covered)
+    assert removed == 1
+    assert len(wal.segments()) == 1
+    # the uncovered mutation is still replayable
+    assert len(list(wal.replay(after_seq=covered))) == 1
+    # gc never removes the newest segment, even if fully covered
+    wal.sync()
+    assert wal.gc(wal.last_seq) == 0
+    assert len(wal.segments()) == 1
+
+
+# ---------------------------------------------------------------------------
+# event feed overflow policies
+# ---------------------------------------------------------------------------
+
+
+def test_event_feed_policies():
+    f = EventFeed(2, "drop_oldest")
+    for i in range(4):
+        f.push(i)
+    assert list(f.drain()) == [2, 3] and f.dropped == 2
+
+    f = EventFeed(2, "drop_newest")
+    for i in range(4):
+        f.push(i)
+    assert list(f.drain()) == [0, 1] and f.dropped == 2
+
+    f = EventFeed(2, "error")
+    f.push(0), f.push(1)
+    with pytest.raises(EventOverflowError):
+        f.push(2)
+    with pytest.raises(ValueError):
+        EventFeed(2, "bogus")
+
+
+def test_subscription_overflow_counter():
+    gs = _open()
+    sub = gs.subscribe(
+        Query.in_flow(7), every=1, max_pending=2, overflow="drop_newest"
+    )
+    for i in range(5):
+        gs.ingest([1, 7], [7, 2])
+    assert sub.pending == 2
+    assert sub.events_dropped == 3
+    assert gs.events_dropped == 0  # session feed is larger; nothing lost
+    ticks = [e.tick for e in sub.poll()]
+    assert ticks == [1, 2]  # drop_newest keeps the OLDEST two
+
+
+# ---------------------------------------------------------------------------
+# event-time ingest: watermark-driven advances, late policies, bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _open_eventtime(**kw):
+    kw.setdefault("window_slices", 8)
+    kw.setdefault("slice_width", 1.0)
+    kw.setdefault("max_lateness", 2.0)
+    return _open(**kw)
+
+
+def test_eventtime_requires_timestamps():
+    gs = _open_eventtime()
+    with pytest.raises(ValueError, match="timestamps"):
+        gs.ingest([1], [2])
+    with pytest.raises(ValueError, match="finite"):
+        gs.ingest([1], [2], timestamps=[math.nan])
+    with pytest.raises(ValueError, match="shape"):
+        gs.ingest([1, 2], [2, 3], timestamps=[1.0])
+
+
+def test_eventtime_validation():
+    with pytest.raises(ValueError):  # max_lateness needs slice_width
+        _open(window_slices=4, max_lateness=1.0)
+    with pytest.raises(ValueError):  # slice_width needs a window
+        _open(slice_width=1.0)
+    with pytest.raises(ValueError):  # lead must leave live slices
+        _open(window_slices=2, slice_width=1.0, max_lateness=5.0)
+
+
+def test_watermark_drives_window_advance():
+    gs = _open_eventtime()
+    gs.ingest([1], [2], timestamps=[0.5])
+    assert gs.stats.auto_advances == 0
+    r = gs.ingest([3], [4], timestamps=[4.5])
+    assert r.auto_advances > 0
+    assert gs.watermark == 2.5
+    assert gs.stats.auto_advances == r.auto_advances
+
+
+def test_in_order_stream_never_late():
+    """An in-order stream is never late, regardless of how batch spans
+    compare to max_lateness — lateness is judged against the watermark
+    promised BEFORE each batch (regression: a batch spanning more than
+    max_lateness must not retract its own head)."""
+    gs = _open_eventtime(max_lateness=0.5)
+    ts = np.arange(0.0, 12.0, 0.05)  # every batch spans 3 slices
+    rng = np.random.default_rng(0)
+    for lo in range(0, ts.size, 60):
+        chunk = ts[lo : lo + 60]
+        gs.ingest(
+            rng.integers(0, 50, chunk.size),
+            rng.integers(0, 50, chunk.size),
+            timestamps=chunk,
+        )
+    assert gs.late_dropped == 0 and gs.late_retracted == 0
+
+
+def _bounded_shuffle(rng, n, width):
+    """A permutation where element i moves at most ``width`` positions."""
+    keys = np.arange(n) + rng.uniform(0, width, n)
+    return np.argsort(keys, kind="stable")
+
+
+def _run_permuted(order, src, dst, w, ts):
+    n = src.size
+    gs = _open_eventtime(double_buffer=False)
+    for lo in range(0, n, 30):
+        idx = order[lo : lo + 30]
+        gs.ingest(src[idx], dst[idx], w[idx], timestamps=ts[idx])
+    return gs, _counters(gs)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_out_of_order_within_lateness_bit_identical(seed):
+    """Property: ingest shuffled within the lateness bound is bit-identical
+    (counters, registers, ring position) to in-order ingest.  Integer
+    weights — float32 integer sums are exact, so per-cell accumulation is
+    order-free and the comparison is exact equality (the turnstile model's
+    integer-Δ case).  Arbitrary float weights agree to float precision
+    (see the companion test)."""
+    rng = np.random.default_rng(seed)
+    n = 300
+    src = rng.integers(0, 200, n).astype(np.uint32)
+    dst = rng.integers(0, 200, n).astype(np.uint32)
+    w = rng.integers(1, 6, n).astype(np.float32)
+    ts = np.sort(rng.uniform(0, 10.0, n))
+
+    gs_a, in_order = _run_permuted(np.arange(n), src, dst, w, ts)
+    # bound the TIME displacement directly: shuffle within windows of
+    # 2.0 time units (== max_lateness), so nothing is ever late.
+    keys = ts + rng.uniform(0, 2.0, n)
+    gs_b, shuffled = _run_permuted(np.argsort(keys, kind="stable"), src, dst, w, ts)
+    assert gs_a.late_retracted == 0 and gs_b.late_retracted == 0
+    for a, b in zip(in_order[:3], shuffled[:3]):
+        np.testing.assert_array_equal(a, b, err_msg=f"seed {seed}")
+    assert in_order[3] == shuffled[3]
+
+
+def test_out_of_order_float_weights_close():
+    """Arbitrary float32 weights: the same multiset reaches every cell, in
+    a different order — agreement is to addition-rounding precision."""
+    rng = np.random.default_rng(0)
+    n = 300
+    src = rng.integers(0, 200, n).astype(np.uint32)
+    dst = rng.integers(0, 200, n).astype(np.uint32)
+    w = rng.random(n).astype(np.float32)
+    ts = np.sort(rng.uniform(0, 10.0, n))
+    _, in_order = _run_permuted(np.arange(n), src, dst, w, ts)
+    keys = ts + rng.uniform(0, 2.0, n)
+    _, shuffled = _run_permuted(np.argsort(keys, kind="stable"), src, dst, w, ts)
+    for a, b in zip(in_order[:3], shuffled[:3]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_late_drop_policy_counts_and_filters():
+    gs = _open_eventtime(late_policy="drop", max_lateness=1.0)
+    gs.ingest([1], [2], timestamps=[10.0])  # watermark -> 9.0
+    r = gs.ingest([3, 4], [5, 6], timestamps=[0.5, 9.5])
+    assert r.late_dropped == 1 and r.late_retracted == 0
+    assert gs.late_dropped == 1
+    # the in-bound edge landed, the late one did not
+    assert gs.query(Query.edge(4, 6)).value > 0
+    assert float(gs.query(Query.edge(3, 5)).value) == 0.0
+
+
+def test_late_retract_policy_nets_to_zero():
+    """Retract (default): the late edge rides the turnstile-delete path —
+    its weight lands and is immediately backed out, so the final state
+    equals a run that never saw the late edge (exact cancellation)."""
+    gs = _open_eventtime(max_lateness=1.0, double_buffer=False)
+    gs.ingest([1], [2], [2.0], timestamps=[10.0])
+    r = gs.ingest([3, 4], [5, 6], [1.5, 2.5], timestamps=[0.5, 9.5])
+    assert r.late_retracted == 1
+    ref = _open_eventtime(max_lateness=1.0, double_buffer=False)
+    ref.ingest([1], [2], [2.0], timestamps=[10.0])
+    ref.ingest([4], [6], [2.5], timestamps=[9.5])
+    for a, b in zip(_counters(gs)[:3], _counters(ref)[:3]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_per_source_watermark_holds_back():
+    gs = _open_eventtime(max_lateness=1.0)
+    gs.ingest([3], [4], timestamps=[2.0], source="slow")
+    # the slow source holds the session watermark at 2.0 - 1.0
+    gs.ingest([1], [2], timestamps=[5.0], source="fast")
+    assert gs.watermark == 1.0
+    gs.ingest([5], [6], timestamps=[6.0], source="slow")
+    assert gs.watermark == 4.0  # min(5, 6) - 1
+    # a source REGISTERING after the watermark has advanced cannot
+    # regress it (the tracker clamps: watermarks are promises)
+    gs.ingest([7], [8], timestamps=[0.5], source="latecomer")
+    assert gs.watermark == 4.0
+
+
+# ---------------------------------------------------------------------------
+# exactly-once recovery: fault injection at every batch boundary
+# ---------------------------------------------------------------------------
+
+N_BATCHES = 8
+CKPT_EVERY = 3
+
+
+def _mk_batches(seed=7):
+    rng = np.random.default_rng(seed)
+    out = []
+    t = 0.0
+    for _ in range(N_BATCHES):
+        n = 20
+        ts = np.sort(t + rng.uniform(0, 1.5, n))
+        t = float(ts.max())
+        out.append(
+            (
+                rng.integers(0, 100, n).astype(np.uint32),
+                rng.integers(0, 100, n).astype(np.uint32),
+                rng.random(n).astype(np.float32),
+                ts,
+            )
+        )
+    return out
+
+
+def _event_key(ev):
+    vals = tuple(
+        float(x) for r in ev.results for x in np.asarray(r.value).ravel()
+    )
+    return (ev.name, ev.tick, ev.epoch, vals, ev.alarm)
+
+
+def _drive(gs, sub, batches, transcript):
+    for i, (s, d, w, ts) in enumerate(batches):
+        gs.ingest(s, d, w, timestamps=ts)
+        transcript.extend(_event_key(e) for e in sub.poll())
+        if (i + 1) % CKPT_EVERY == 0 and gs._ckpt is not None:
+            gs.checkpoint()
+
+
+def _subscribed(gs):
+    return gs.subscribe(
+        Query.in_flow(7),
+        Query.reach(3, 9),
+        every=1,
+        name="m",
+        alarm=lambda rs: bool(np.asarray(rs[0].value) > 5),
+    )
+
+
+@pytest.mark.parametrize("crash_at", list(range(N_BATCHES + 1)))
+def test_exactly_once_replay_any_crash_point(tmp_path, crash_at):
+    """Crash after ``crash_at`` batches, recover into a fresh process, and
+    the consumed event sequence + final counters are bit-identical to the
+    uninterrupted run — including crash before any checkpoint (genesis
+    replay) and crash after the final batch."""
+    batches = _mk_batches()
+    wal, ckpt = tmp_path / "wal", tmp_path / "ckpt"
+
+    oracle = _open_eventtime(double_buffer=False)
+    want = []
+    _drive(oracle, _subscribed(oracle), batches, want)
+    want_counters = _counters(oracle)
+
+    def open_durable():
+        return _open_eventtime(
+            double_buffer=False,
+            wal_dir=str(wal),
+            checkpoint_dir=str(ckpt),
+        )
+
+    gs1 = open_durable()
+    sub1 = _subscribed(gs1)
+    got = []
+    _drive(gs1, sub1, batches[:crash_at], got)
+    consumed_tick = sub1.ticks
+    del gs1  # crash: no close, no final checkpoint
+
+    gs2 = open_durable()
+    sub2 = _subscribed(gs2)
+    sub2.seek(consumed_tick)  # consumer's durable position, BEFORE recover
+    report = gs2.recover()
+    assert isinstance(report, RecoveryReport)
+    got.extend(_event_key(e) for e in sub2.poll())
+    _drive(gs2, sub2, batches[crash_at:], got)
+
+    assert got == want, f"crash_at={crash_at}"
+    if crash_at % CKPT_EVERY != 0:
+        # crash between checkpoints: recovery must have actually replayed
+        # (a crash right ON a checkpoint leaves an empty WAL suffix)
+        assert sub2.events_deduped + report.mutations_replayed > 0
+    for a, b in zip(_counters(gs2)[:3], want_counters[:3]):
+        np.testing.assert_array_equal(a, b, err_msg=f"crash_at={crash_at}")
+
+
+def test_recover_requires_wal(tmp_path):
+    gs = _open(checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="wal_dir"):
+        gs.recover()
+
+
+def test_checkpoint_gc_drops_covered_wal_segments(tmp_path):
+    gs = _open(
+        wal_dir=str(tmp_path / "wal"), checkpoint_dir=str(tmp_path / "ckpt")
+    )
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        s, d, w = _edges(rng)
+        gs.ingest(s, d, w)
+        gs.checkpoint()
+    # every retained checkpoint covers the whole log; old segments are gone
+    assert len(gs._wal.segments()) <= 2
+    # and recovery from what remains still works
+    gs.flush()
+    ref = _counters_plain(gs)
+    gs2 = _open(
+        wal_dir=str(tmp_path / "wal"), checkpoint_dir=str(tmp_path / "ckpt")
+    )
+    gs2.recover()
+    np.testing.assert_array_equal(_counters_plain(gs2), ref)
+
+
+def _counters_plain(gs):
+    gs.flush()
+    return np.asarray(gs.sketch.counters)
+
+
+# ---------------------------------------------------------------------------
+# corrupt-checkpoint fallback (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_latest_falls_back_to_previous(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    state = {"x": np.arange(4, dtype=np.float32)}
+    mgr.save(1, state, metadata={"tag": "one"})
+    mgr.save(2, {"x": np.arange(4, dtype=np.float32) * 2}, metadata={"tag": "two"})
+    shard = tmp_path / "step_0000000002" / "arrays.npz"
+    shard.write_bytes(shard.read_bytes()[:40])  # truncate mid-zip
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got, meta = mgr.restore(like={"x": np.zeros(4, np.float32)})
+    assert meta["tag"] == "one" and meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(got["x"]), state["x"])
+    assert any(
+        isinstance(w.message, RuntimeWarning) and "step 2" in str(w.message)
+        for w in caught
+    )
+    # an explicitly requested step never silently substitutes
+    with pytest.raises(CheckpointCorruptError) as ei:
+        mgr.restore(step=2, like={"x": np.zeros(4, np.float32)})
+    assert ei.value.step == 2 and ei.value.path.name == "arrays.npz"
+
+
+def test_all_checkpoints_corrupt_raises_first_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, {"x": np.zeros(2, np.float32)})
+    (tmp_path / "step_0000000001" / "arrays.npz").write_bytes(b"not a zip")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        with pytest.raises(CheckpointCorruptError):
+            mgr.restore(like={"x": np.zeros(2, np.float32)})
+
+
+def test_read_metadata_manifest_only(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(5, {"x": np.zeros(2, np.float32)}, metadata={"wal_seq": 42})
+    meta = mgr.read_metadata(5)
+    assert meta["wal_seq"] == 42 and meta["step"] == 5
+
+
+# ---------------------------------------------------------------------------
+# fleet per-tenant WAL lanes
+# ---------------------------------------------------------------------------
+
+
+def _fleet(tmp_path, **kw):
+    from repro.fleet.session import SketchFleet
+
+    kw.setdefault("capacity", 2)
+    kw.setdefault("seed", 3)
+    kw.setdefault("checkpoint_dir", str(tmp_path / "ckpt"))
+    kw.setdefault("wal_dir", str(tmp_path / "wal"))
+    return SketchFleet(CFG, **kw)
+
+
+def test_fleet_lane_recovery_matches_oracle(tmp_path):
+    from repro.fleet.session import SketchFleet
+
+    rng = np.random.default_rng(0)
+    n_tenants, batches = 4, []
+    for b in range(6):
+        batches.append(
+            (
+                rng.integers(0, n_tenants, 30),
+                rng.integers(0, 200, 30).astype(np.uint32),
+                rng.integers(0, 200, 30).astype(np.uint32),
+                rng.random(30).astype(np.float32),
+            )
+        )
+
+    oracle = SketchFleet(CFG, capacity=n_tenants, seed=3)
+    for ids, s, d, w in batches:
+        oracle.ingest_mixed(ids, s, d, w)
+    oracle.flush()
+    want = {
+        t: np.asarray(oracle.tenant(t).sketch.counters) for t in range(n_tenants)
+    }
+
+    # capacity 2 < 4 tenants: evictions (and lane GC) happen mid-stream
+    f1 = _fleet(tmp_path)
+    for ids, s, d, w in batches[:4]:
+        f1.ingest_mixed(ids, s, d, w)
+    f1.flush()
+    assert f1.stats.evictions > 0  # shard+wal_seq coverage is exercised
+    del f1  # crash
+
+    f2 = _fleet(tmp_path)
+    reports = f2.recover()
+    assert set(reports) == set(range(n_tenants))
+    for ids, s, d, w in batches[4:]:
+        f2.ingest_mixed(ids, s, d, w)
+    f2.flush()
+    for t in range(n_tenants):
+        np.testing.assert_array_equal(
+            np.asarray(f2.tenant(t).sketch.counters), want[t], err_msg=f"t={t}"
+        )
+
+
+def test_fleet_close_retires_lane(tmp_path):
+    f = _fleet(tmp_path)
+    f.tenant("a").ingest([1, 2], [3, 4])
+    f.tenant("b").ingest([5], [6])
+    f.flush()
+    f.tenant("a").close()
+    f2 = _fleet(tmp_path)
+    reports = f2.recover()
+    assert set(reports) == {"b"}
+
+
+def test_fleet_wal_receipt_and_timestamps(tmp_path):
+    f = _fleet(tmp_path)
+    r = f.tenant("x").ingest([1, 2], [3, 4], timestamps=[1.0, 2.0])
+    assert r.wal_seq is not None
+    muts = list(f._wal_lane("x").replay())
+    edge = [m for m in muts if isinstance(m, EdgeMutation)][0]
+    np.testing.assert_array_equal(edge.timestamps, [1.0, 2.0])
+
+
+def test_fleet_events_overflow_counter(tmp_path):
+    f = _fleet(tmp_path, events_policy="drop_newest")
+    sess = f.tenant("t")
+    sess.subscribe(Query.in_flow(7), every=1, max_pending=1, name="s")
+    for _ in range(3):
+        sess.ingest([1, 7], [7, 2])
+    assert sess.subscriptions[0].events_dropped == 2
+    assert f.events_dropped == 0  # fleet feed is deep enough here
